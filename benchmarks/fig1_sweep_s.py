@@ -1,0 +1,41 @@
+"""Paper Figures 1/2: solver total time as a function of s (the number of
+wanted eigenpairs). Reproduces the crossover the paper reports: Krylov
+variants win for small s but their cost grows quickly with s (iterations +
+re-orthogonalization + restart costs), while TD's growth is the mild n^2 s
+back-transform term."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import solve
+
+from .common import BAND_W, md_problem
+
+
+def main(full: bool = False) -> list[str]:
+    out = []
+    prob = md_problem()
+    n = prob.A.shape[0]
+    sweep = (4, 8, 16, 32) if not full else (50, 100, 200, 400)
+    out.append(f"# fig1: n={n}, total seconds vs s")
+    out.append("s,TD,KE,KI")
+    for s in sweep:
+        row = [str(s)]
+        for variant in ("TD", "KE", "KI"):
+            invert = variant in ("KE", "KI")
+            res = solve(prob.A, prob.B, s, variant=variant, invert=invert,
+                        band_width=BAND_W, max_restarts=150)
+            res = solve(prob.A, prob.B, s, variant=variant, invert=invert,
+                        band_width=BAND_W, max_restarts=150)  # warm
+            row.append(f"{res.stage_times['Tot.']:.3f}")
+            out.append(f"fig1_s{s}_{variant},"
+                       f"{res.stage_times['Tot.'] * 1e6:.1f},"
+                       f"matvecs={res.info.get('n_matvec', 0)}")
+        out.append("# " + ",".join(row))
+    return out
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
+    for line in main():
+        print(line)

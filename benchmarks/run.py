@@ -1,0 +1,57 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2]
+--full switches the eigensolver benchmarks to the paper's exact problem
+sizes (n=9,997 / n=17,243 — hours of CPU time; CI scale is the default and
+preserves the papers' qualitative ordering, see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+TABLES = ("table2", "table3", "table4", "table6", "fig1", "fig2",
+          "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=TABLES)
+    args = ap.parse_args()
+
+    from . import (fig1_sweep_s, fig2_sweep_modern, roofline_report,
+                   table2_stage_timings, table3_accuracy,
+                   table4_blocked_vs_fused, table6_kernel_pipelines)
+
+    mods = {
+        "table2": table2_stage_timings,
+        "table3": table3_accuracy,
+        "table4": table4_blocked_vs_fused,
+        "table6": table6_kernel_pipelines,
+        "fig1": fig1_sweep_s,
+        "fig2": fig2_sweep_modern,
+        "roofline": roofline_report,
+    }
+    names = [args.only] if args.only else list(TABLES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            for line in mods[name].main(full=args.full):
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_ERROR,0,{type(e).__name__}: {e}", flush=True)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

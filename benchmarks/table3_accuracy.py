@@ -1,0 +1,42 @@
+"""Paper Table 3: accuracy (B-orthogonality + relative residual) of the four
+solvers. Metrics are computed exactly as the paper defines them, on the pair
+actually solved (the MD experiment solves the inverse pair (B, A))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solve
+from repro.core.residuals import b_orthogonality, relative_residual
+
+from .common import BAND_W, DFT_S, MD_S, dft_problem, md_problem
+
+
+def main(full: bool = False) -> list[str]:
+    out = []
+    for name, prob, s, invert, m, mr in [
+            ("md", md_problem(), MD_S, True, None, 120),
+            ("dft", dft_problem(), DFT_S, False, 96, 200)]:
+        out.append(f"# table3 {name}: n={prob.A.shape[0]} s={s}")
+        for variant in ("TD", "TT", "KE", "KI"):
+            inv = invert and variant in ("KE", "KI")
+            from .common import solve_cached
+            res = solve_cached(name, prob, s, variant=variant, invert=inv,
+                               band_width=BAND_W, max_restarts=mr, m=m)
+            orth = float(b_orthogonality(res.X, prob.B))
+            resid = float(relative_residual(prob.A, prob.B, res.X,
+                                            res.evals))
+            # ground-truth eigenvalue error (we know the exact spectrum)
+            err = float(jnp.max(jnp.abs(
+                res.evals - prob.exact_evals[:s])
+                / jnp.abs(prob.exact_evals[:s])))
+            out.append(f"table3_{name}_{variant},0.0,"
+                       f"orth={orth:.3e};resid={resid:.3e};"
+                       f"eval_relerr={err:.3e}")
+    return out
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
+    for line in main():
+        print(line)

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill + greedy decode with the sharded-KV
+decode path (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-1b]
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "16", "--gen", "16",
+    ]
+    env = dict(os.environ, PYTHONPATH="src")
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

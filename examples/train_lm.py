@@ -1,0 +1,32 @@
+"""End-to-end training driver example: a few hundred steps of an assigned
+architecture (reduced same-family config on CPU), with checkpointing,
+auto-resume, and the paper-technique spectral probe enabled.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch xlstm-125m]
+"""
+import argparse
+import subprocess
+import sys
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "artifacts/ckpt_example",
+        "--ckpt-every", "100",
+        "--spectral-every", "100",
+    ]
+    env = dict(os.environ, PYTHONPATH="src")
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

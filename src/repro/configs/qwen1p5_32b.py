@@ -1,0 +1,15 @@
+"""qwen1.5-32b — 64L d_model=5120 40H (MHA kv=40) d_ff=27392 vocab=152064,
+QKV bias. [hf:Qwen/Qwen1.5 family]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=128,
+    d_ff=27_392,
+    vocab_size=152_064,
+    attn_qkv_bias=True,
+)

@@ -1,0 +1,33 @@
+"""repro.core — dense symmetric-definite generalized eigensolvers (the paper's
+contribution) as composable JAX modules."""
+from .back_transform import (back_transform_generalized,
+                             forward_transform_generalized)
+from .cholesky import cholesky_blocked, cholesky_upper
+from .gsyeig import VARIANTS, GSyEigResult, solve
+from .lanczos import (LanczosResult, default_subspace, lanczos_solve,
+                      lanczos_solve_jit)
+from .operators import ExplicitC, ImplicitC, apply_op
+from .residuals import (AccuracyReport, accuracy_report, b_normalize,
+                        b_orthogonality, relative_residual)
+from .sbr import band_to_tridiag, reduce_to_band, two_stage_tridiagonalize
+from .standard_form import to_standard_sygst, to_standard_two_trsm
+from .tridiag import (TridiagResult, apply_q, apply_qt,
+                      tridiagonalize, tridiagonalize_blocked)
+from .tridiag_eig import (bisect_eigenvalues, eigh_tridiag_selected,
+                          inverse_iteration, sturm_count, sturm_counts)
+
+__all__ = [
+    "solve", "VARIANTS", "GSyEigResult",
+    "cholesky_upper", "cholesky_blocked",
+    "to_standard_two_trsm", "to_standard_sygst",
+    "tridiagonalize", "tridiagonalize_blocked", "apply_q",
+    "apply_qt", "TridiagResult",
+    "reduce_to_band", "band_to_tridiag", "two_stage_tridiagonalize",
+    "sturm_count", "sturm_counts", "bisect_eigenvalues",
+    "inverse_iteration", "eigh_tridiag_selected",
+    "lanczos_solve", "lanczos_solve_jit", "LanczosResult", "default_subspace",
+    "ExplicitC", "ImplicitC", "apply_op",
+    "back_transform_generalized", "forward_transform_generalized",
+    "accuracy_report", "AccuracyReport", "b_orthogonality",
+    "relative_residual", "b_normalize",
+]

@@ -1,0 +1,44 @@
+"""GS1 — Cholesky factorization B = U^T U (upper factor).
+
+Two paths:
+  * ``cholesky_upper``  — XLA's fused factorization (the "vendor library" path;
+    the paper's DPOTRF/MAGMA_DPOTRF analogue).
+  * ``cholesky_blocked`` — right-looking blocked algorithm (the PLASMA/lf+SM
+    task-parallel analogue). Block operations are the units that map 1:1 onto
+    the Pallas/sharded tiles; XLA fuses the per-block work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cholesky_upper(B: jax.Array) -> jax.Array:
+    """Return upper-triangular U with B = U^T U."""
+    L = jnp.linalg.cholesky(B)
+    return L.T
+
+
+def cholesky_blocked(B: jax.Array, block: int = 256) -> jax.Array:
+    """Right-looking blocked Cholesky (upper factor), B = U^T U.
+
+    for k in blocks:
+        U_kk  = chol(B_kk)
+        U_k,: = U_kk^{-T} B_k,:          (triangular solve on the block row)
+        B_t,t = B_t,t - U_k,:^T U_k,:    (SYRK trailing update)
+    """
+    n = B.shape[0]
+    M = B
+    U = jnp.zeros_like(B)
+    for k0 in range(0, n, block):
+        k1 = min(k0 + block, n)
+        Bkk = M[k0:k1, k0:k1]
+        Ukk = jnp.linalg.cholesky(Bkk).T
+        U = U.at[k0:k1, k0:k1].set(Ukk)
+        if k1 < n:
+            row = jax.scipy.linalg.solve_triangular(
+                Ukk, M[k0:k1, k1:], trans=1, lower=False
+            )
+            U = U.at[k0:k1, k1:].set(row)
+            M = M.at[k1:, k1:].add(-(row.T @ row))
+    return jnp.triu(U)

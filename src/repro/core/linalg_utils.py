@@ -1,0 +1,190 @@
+"""Shared dense linear-algebra helpers for the eigensolver core.
+
+All routines are pure-jnp, fixed-shape, and jit-friendly. They implement the
+LAPACK building blocks (dlarfg-style Householder reflectors, compact-WY
+accumulation, Givens rotations) that the paper's four pipelines are made of.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def symmetrize(M: jax.Array) -> jax.Array:
+    """Return (M + M^T)/2 — used after two-sided updates to kill drift."""
+    return 0.5 * (M + M.T)
+
+
+def householder(x: jax.Array):
+    """LAPACK dlarfg: given x (k,), return (v, tau, beta) with
+    (I - tau v v^T) x = beta e_1 and v[0] = 1.
+
+    If the tail of x is (numerically) zero, tau = 0 and beta = x[0]
+    (identity reflector).
+    """
+    alpha = x[0]
+    sigma = jnp.sum(x[1:] ** 2)
+    safe = sigma > 0.0
+    norm_x = jnp.sqrt(alpha * alpha + sigma)
+    # beta = -sign(alpha) * ||x||, sign(0) treated as +1 to avoid c=0.
+    sgn = jnp.where(alpha >= 0.0, 1.0, -1.0)
+    beta = jnp.where(safe, -sgn * norm_x, alpha)
+    denom = jnp.where(safe, alpha - beta, 1.0)
+    v = jnp.concatenate([jnp.ones((1,), x.dtype), x[1:] / denom])
+    v = jnp.where(safe, v, jnp.zeros_like(v).at[0].set(1.0))
+    tau = jnp.where(safe, (beta - alpha) / beta, 0.0)
+    return v, tau, beta
+
+
+def householder_masked(x: jax.Array, pivot: jax.Array):
+    """Householder reflector for the tail x[pivot:] of a full-length vector.
+
+    Entries at indices < pivot are ignored; the returned v is full-length with
+    v[pivot] = 1 and zeros before `pivot`. Works with a traced `pivot`, so it
+    can live inside lax loops (the workhorse of the tridiagonalization).
+    Returns (v, tau, beta).
+    """
+    n = x.shape[0]
+    idx = jnp.arange(n)
+    xm = jnp.where(idx >= pivot, x, 0.0)
+    alpha = jnp.take(x, pivot, mode="clip")
+    sigma = jnp.sum(xm**2) - alpha * alpha
+    sigma = jnp.maximum(sigma, 0.0)
+    safe = sigma > 0.0
+    norm_x = jnp.sqrt(alpha * alpha + sigma)
+    sgn = jnp.where(alpha >= 0.0, 1.0, -1.0)
+    beta = jnp.where(safe, -sgn * norm_x, alpha)
+    denom = jnp.where(safe, alpha - beta, 1.0)
+    v = jnp.where(idx > pivot, xm / denom, 0.0)
+    v = v.at[pivot].set(1.0)
+    v = jnp.where(safe, v, jnp.zeros_like(v).at[pivot].set(1.0))
+    tau = jnp.where(safe, (beta - alpha) / beta, 0.0)
+    return v, tau, beta
+
+
+def qr_wy(E: jax.Array):
+    """Householder QR with compact-WY accumulation.
+
+    E is (p, w) with p >= 1. Returns (V, T, R) such that
+        Q = I_p - V T V^T  (orthogonal, p x p),   Q^T E = R (upper trapezoidal)
+    V is (p, w) unit lower trapezoidal, T is (w, w) upper triangular.
+    The number of nontrivial reflectors is min(p, w); trailing columns of V/T
+    are zero-padded so shapes stay static.
+    """
+    p, w = E.shape
+    nr = min(p, w)
+    V = jnp.zeros((p, w), E.dtype)
+    T = jnp.zeros((w, w), E.dtype)
+    R = E
+    for j in range(nr):
+        v, tau, _ = householder_masked(R[:, j], jnp.asarray(j))
+        # apply reflector to trailing columns (including j to produce R)
+        proj = v @ R  # (w,)
+        R = R - tau * jnp.outer(v, proj)
+        V = V.at[:, j].set(v)
+        # T update: T[:j, j] = -tau * T[:j, :j] @ (V[:, :j]^T v)
+        if j > 0:
+            z = V[:, :j].T @ v
+            T = T.at[:j, j].set(-tau * (T[:j, :j] @ z))
+        T = T.at[j, j].set(tau)
+    # clean numerical noise below the diagonal of R
+    R = jnp.triu(R)
+    return V, T, R
+
+
+def qr_wy_masked(E: jax.Array, row_start) -> tuple:
+    """Householder QR of the sub-panel E[row_start:, :] in fixed shapes.
+
+    E is full-height (n, w); reflector j pivots at row ``row_start + j`` and
+    only touches rows >= row_start (entries above are untouched — exactly the
+    blocked band-reduction panel op). Returns (V, T, R) with V (n, w) masked
+    (zeros above the pivot rows), T (w, w), R = Q^T E (full height: rows
+    above row_start pass through unchanged).
+
+    Unlike ``qr_wy`` this traces a FIXED-shape graph regardless of the panel
+    position, so a fori_loop over panels compiles once (the per-panel
+    trace-time specialization was a 3-minute XLA compile at n=256).
+    """
+    n, w = E.shape
+    V = jnp.zeros((n, w), E.dtype)
+    T = jnp.zeros((w, w), E.dtype)
+    R = E
+    for j in range(w):
+        v, tau, _ = householder_masked(R[:, j], row_start + j)
+        R = R - tau * jnp.outer(v, v @ R)
+        V = V.at[:, j].set(v)
+        if j > 0:
+            z = V[:, :j].T @ v
+            T = T.at[:j, j].set(-tau * (T[:j, :j] @ z))
+        T = T.at[j, j].set(tau)
+    return V, T, R
+
+
+def apply_wy_left_t(V: jax.Array, T: jax.Array, M: jax.Array) -> jax.Array:
+    """Compute Q^T M with Q = I - V T V^T  =>  M - V T^T (V^T M)."""
+    return M - V @ (T.T @ (V.T @ M))
+
+
+def apply_wy_right(M: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
+    """Compute M Q with Q = I - V T V^T  =>  M - ((M V) T) V^T."""
+    return M - (M @ V) @ T @ V.T
+
+
+def apply_wy_two_sided(C: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
+    """Compute Q^T C Q for symmetric C with Q = I - V T V^T (4 GEMMs)."""
+    X = C @ V  # (p, w)
+    XT = X @ T  # (p, w)
+    W = V.T @ XT  # (w, w)
+    out = C - XT @ V.T - V @ XT.T + V @ (T.T @ W) @ V.T
+    return symmetrize(out)
+
+
+def givens(a: jax.Array, b: jax.Array):
+    """Return (c, s) with [c s; -s c]^T applied to rows mixing (a; b) -> (r; 0).
+
+    Concretely: c*a + s*b = r, -s*a + c*b = 0. Safe when a = b = 0 (identity).
+    """
+    r = jnp.sqrt(a * a + b * b)
+    safe = r > 0.0
+    c = jnp.where(safe, a / jnp.where(safe, r, 1.0), 1.0)
+    s = jnp.where(safe, b / jnp.where(safe, r, 1.0), 0.0)
+    return c, s
+
+
+def rotate_rows(M: jax.Array, p: jax.Array, q: jax.Array, c, s) -> jax.Array:
+    """Rows p, q of M <- (c*row_p + s*row_q, -s*row_p + c*row_q). Traced p/q ok."""
+    row_p = M[p, :]
+    row_q = M[q, :]
+    M = M.at[p, :].set(c * row_p + s * row_q)
+    M = M.at[q, :].set(-s * row_p + c * row_q)
+    return M
+
+
+def rotate_cols(M: jax.Array, p: jax.Array, q: jax.Array, c, s) -> jax.Array:
+    """Cols p, q of M <- (c*col_p + s*col_q, -s*col_p + c*col_q)."""
+    col_p = M[:, p]
+    col_q = M[:, q]
+    M = M.at[:, p].set(c * col_p + s * col_q)
+    M = M.at[:, q].set(-s * col_p + c * col_q)
+    return M
+
+
+def extract_tridiag(M: jax.Array):
+    """Return (d, e): diagonal and first subdiagonal of M."""
+    n = M.shape[0]
+    d = jnp.diagonal(M)
+    e = M[jnp.arange(1, n), jnp.arange(0, n - 1)]
+    return d, e
+
+
+def gershgorin_bounds(d: jax.Array, e: jax.Array):
+    """Eigenvalue bounds for the symmetric tridiagonal (d, e)."""
+    n = d.shape[0]
+    ea = jnp.abs(e)
+    left = jnp.concatenate([jnp.zeros((1,), d.dtype), ea])
+    right = jnp.concatenate([ea, jnp.zeros((1,), d.dtype)])
+    radius = left + right
+    lo = jnp.min(d - radius)
+    hi = jnp.max(d + radius)
+    span = jnp.maximum(hi - lo, jnp.finfo(d.dtype).tiny)
+    return lo - 1e-3 * span, hi + 1e-3 * span

@@ -1,0 +1,64 @@
+"""Operator abstraction for the Krylov-subspace variants.
+
+The paper's ARPACK reverse-communication interface becomes a small pytree
+protocol: an operator is a NamedTuple of arrays plus `apply_op`, which the
+Lanczos driver closes over. Variants:
+
+  * ExplicitC  — KE: y = C w (one SYMV, 2 n^2 flops/iter)
+  * ImplicitC  — KI: y = U^{-T}(A(U^{-1} w))  (TRSV + SYMV + TRSV, 4 n^2)
+
+Each can route its SYMV through the Pallas kernel path (``use_kernel=True``
+set by the driver) or plain jnp (XLA dot).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+_solve_tri = jax.scipy.linalg.solve_triangular
+
+
+class ExplicitC(NamedTuple):
+    C: jax.Array
+
+
+class ImplicitC(NamedTuple):
+    A: jax.Array
+    U: jax.Array
+
+
+Operator = Union[ExplicitC, ImplicitC]
+
+
+def apply_op(op: Operator, w: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """One operator application; the hot loop of KE (KE1) / KI (KI1-KI3)."""
+    if isinstance(op, ExplicitC):
+        if use_kernel:
+            from repro.kernels.symv import ops as symv_ops
+            return symv_ops.symv(op.C, w)
+        return op.C @ w
+    if isinstance(op, ImplicitC):
+        # KI1: wbar = U^{-1} w
+        wbar = _solve_tri(op.U, w, trans=0, lower=False)
+        # KI2: what = A wbar
+        if use_kernel:
+            from repro.kernels.symv import ops as symv_ops
+            what = symv_ops.symv(op.A, wbar)
+        else:
+            what = op.A @ wbar
+        # KI3: z = U^{-T} what
+        return _solve_tri(op.U, what, trans=1, lower=False)
+    raise TypeError(f"unknown operator {type(op)}")
+
+
+def op_dim(op: Operator) -> int:
+    if isinstance(op, ExplicitC):
+        return op.C.shape[0]
+    return op.A.shape[0]
+
+
+def matvecs_per_apply(op: Operator) -> int:
+    """Bookkeeping for the benchmark tables: flop-equivalent 2n^2 units."""
+    return 1 if isinstance(op, ExplicitC) else 2

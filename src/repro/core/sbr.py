@@ -1,0 +1,131 @@
+"""TT1/TT2 — two-stage tridiagonalization (SBR toolbox analogue).
+
+Stage 1 (``reduce_to_band``, DSYRDB): dense -> band of width w via panel QR +
+compact-WY two-sided updates. All flops are GEMMs (the BLAS-3 / MXU-friendly
+profile that motivates variant TT in the paper). Q1 is accumulated
+*explicitly* by GEMMs, as the paper describes (two matrix products per panel).
+
+Stage 2 (``band_to_tridiag``, DSBRDT): band -> tridiagonal via Givens bulge
+chasing (Schwarz/Kaufman bandwidth-decrement sweeps). Rotations are also
+accumulated into Q from the right, so that TT4 is a single GEMM Y = Q Z.
+
+Note on storage: we keep the band matrix in full dense (n, n) storage and
+rotate full rows/columns with masked dynamic updates — flop-shape-faithful,
+simple, and correct. The O(n^2 w)-storage band kernel (see kernels/band_mv)
+is the TPU-side optimization; EXPERIMENTS.md discusses the gap.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .linalg_utils import (
+    apply_wy_two_sided,
+    extract_tridiag,
+    givens,
+    qr_wy_masked,
+    rotate_cols,
+    rotate_rows,
+    symmetrize,
+)
+
+
+class BandResult(NamedTuple):
+    W: jax.Array   # (n, n) banded (bandwidth w) symmetric matrix
+    Q1: jax.Array  # (n, n) explicit orthogonal factor, W = Q1^T C Q1
+
+
+@partial(jax.jit, static_argnames=("w",))
+def reduce_to_band(C: jax.Array, w: int = 32) -> BandResult:
+    """Stage 1: Q1^T C Q1 = W with bandwidth w. Panel QR + WY updates.
+
+    One fori_loop over panels with FIXED-shape bodies: the panel is the
+    full-height column slice, reflectors are masked below the band row
+    (qr_wy_masked), and the two-sided update H M H runs at full (n, n) —
+    H acts as identity on the already-reduced rows because V is masked, so
+    the update simultaneously annihilates the panel and updates the trailing
+    block (no shape specialization per panel => compiles once).
+    """
+    n = C.shape[0]
+    Q1_0 = jnp.eye(n, dtype=C.dtype)
+    n_panels = len(range(0, max(n - w - 1, 0), w))
+
+    def body(k, carry):
+        M, Q1 = carry
+        c0 = k * w
+        r0 = c0 + w
+        E = jax.lax.dynamic_slice(M, (k * 0, c0), (n, w))
+        V, T, _ = qr_wy_masked(E, r0)
+        M = apply_wy_two_sided(M, V, T)
+        # explicit Q1 accumulation (two GEMMs per panel, paper Sec. 2.2)
+        Q1 = Q1 - ((Q1 @ V) @ T) @ V.T
+        return M, Q1
+
+    if n_panels > 0:
+        M, Q1 = jax.lax.fori_loop(0, n_panels, body, (C, Q1_0))
+    else:
+        M, Q1 = C, Q1_0
+    band_mask = jnp.abs(jnp.arange(n)[:, None] - jnp.arange(n)[None, :]) <= w
+    return BandResult(W=symmetrize(jnp.where(band_mask, M, 0.0)), Q1=Q1)
+
+
+class TridiagFromBandResult(NamedTuple):
+    d: jax.Array   # (n,)
+    e: jax.Array   # (n-1,)
+    Q: jax.Array   # (n, n) accumulated Q1*Q2
+
+
+@partial(jax.jit, static_argnames=("w",), donate_argnums=())
+def band_to_tridiag(W: jax.Array, Q1: jax.Array, w: int) -> TridiagFromBandResult:
+    """Stage 2: Givens bulge-chasing, bandwidth-decrement sweeps b = w..2.
+
+    For each sweep bandwidth b: for each column j, annihilate W[j+b, j] with a
+    rotation of rows/cols (j+b-1, j+b); the bulge appears at (p+b, p-1) for
+    p = j+b and is chased down in steps of b. Each rotation is also applied to
+    Q from the right (Q <- Q G), accumulating Q2 into Q1 (paper: TT2 keeps all
+    updates BLAS-friendly; here each is an O(n) masked row/col update).
+    """
+    n = W.shape[0]
+    M = W
+    Q = Q1
+
+    def chase_one(state):
+        M, Q, r, c, b = state
+        # annihilate M[r, c] with rows (r-1, r)
+        a = M[r - 1, c]
+        bb = M[r, c]
+        cth, sth = givens(a, bb)
+        M = rotate_rows(M, r - 1, r, cth, sth)
+        M = rotate_cols(M, r - 1, r, cth, sth)
+        Q = rotate_cols(Q, r - 1, r, cth, sth)
+        # next bulge position
+        c_new = r - 1
+        r_new = r + b
+        return M, Q, r_new, c_new, b
+
+    def chase_cond(state):
+        _, _, r, _, _ = state
+        return r < n
+
+    for b in range(w, 1, -1):
+        def col_body(j, carry):
+            M, Q = carry
+            r0 = j + b
+            state = (M, Q, r0, j, jnp.asarray(b))
+            M, Q, _, _, _ = jax.lax.while_loop(chase_cond, chase_one, state)
+            return M, Q
+
+        if n - b > 0:
+            M, Q = jax.lax.fori_loop(0, n - b, col_body, (M, Q))
+
+    d, e = extract_tridiag(symmetrize(M))
+    return TridiagFromBandResult(d=d, e=e, Q=Q)
+
+
+def two_stage_tridiagonalize(C: jax.Array, w: int = 32):
+    """TT1+TT2 composed: returns (d, e, Q) with Q^T C Q = T, Q explicit."""
+    band = reduce_to_band(C, w=w)
+    return band_to_tridiag(band.W, band.Q1, w)

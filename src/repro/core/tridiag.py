@@ -1,0 +1,148 @@
+"""TD1 — one-stage Householder tridiagonalization (DSYTRD analogue).
+
+Q^T C Q = T with Q = H_0 H_1 ... H_{n-3}. The reflectors are kept in
+factored form (V, tau) — like LAPACK, Q is never built explicitly, and the
+back-transform applies the reflectors directly (TD3 / DORMTR analogue).
+
+The loop is a fixed-shape ``lax.fori_loop``: every iteration does a full-size
+masked symmetric mat-vec plus a rank-2 update (exactly the BLAS-2 profile the
+paper blames for DSYTRD's poor performance on throughput hardware — that
+memory-bound profile is what our roofline analysis quantifies on TPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .linalg_utils import extract_tridiag, householder_masked
+
+
+class TridiagResult(NamedTuple):
+    d: jax.Array      # (n,)  diagonal of T
+    e: jax.Array      # (n-1,) subdiagonal of T
+    V: jax.Array      # (n, n) Householder vectors, column j = v_j (v_j[j+1] = 1)
+    tau: jax.Array    # (n,)  reflector scales (tau[j] for column j)
+
+
+def tridiagonalize(C: jax.Array) -> TridiagResult:
+    """Reduce symmetric C to tridiagonal T via n-2 Householder similarity steps."""
+    n = C.shape[0]
+    dtype = C.dtype
+
+    def body(j, carry):
+        M, V, tau = carry
+        col = M[:, j]
+        v, tj, _ = householder_masked(col, j + 1)
+        # two-sided rank-2 update: M <- H M H, H = I - tau v v^T
+        w = tj * (M @ v)
+        w = w - (0.5 * tj * (v @ w)) * v
+        M = M - jnp.outer(v, w) - jnp.outer(w, v)
+        V = V.at[:, j].set(v)
+        tau = tau.at[j].set(tj)
+        return M, V, tau
+
+    V0 = jnp.zeros((n, n), dtype)
+    tau0 = jnp.zeros((n,), dtype)
+    M, V, tau = jax.lax.fori_loop(0, max(n - 2, 0), body, (C, V0, tau0))
+    d, e = extract_tridiag(M)
+    return TridiagResult(d=d, e=e, V=V, tau=tau)
+
+
+def tridiagonalize_blocked(C: jax.Array, panel: int = 32) -> TridiagResult:
+    """Blocked DSYTRD (latency-optimized): per-panel BLAS-2 column work +
+    one rank-2b BLAS-3 trailing update (SYR2K) per panel.
+
+    This is the paper's central BLAS-2 vs BLAS-3 distinction made concrete:
+    the unblocked ``tridiagonalize`` touches the full trailing matrix per
+    column (n matvecs + n rank-2 updates = all BLAS-2); here only the panel
+    does matvecs and the trailing update is a single fused SYR2K per panel
+    (primed for kernels/syr2k on the TPU target). Same (V, tau) contract.
+
+    Panel recurrences (LAPACK dlatrd): within a panel starting at column c,
+    having processed columns c..j-1 with accumulators V_p, W_p:
+        a_j   = (A - V_p W_p^T - W_p V_p^T) e_j        (update column j)
+        v_j   = householder(a_j)
+        w_j   = tau (A v - V_p (W_p^T v) - W_p (V_p^T v));
+        w_j  -= (tau/2)(w_j^T v) v
+    then A <- A - V_p W_p^T - W_p V_p^T once per panel.
+    """
+    n = C.shape[0]
+    dtype = C.dtype
+    n_cols = max(n - 2, 0)
+    n_panels = -(-n_cols // panel) if n_cols else 0
+
+    def panel_body(p, carry):
+        M, V, tau = carry
+        c0 = p * panel
+        Vp = jnp.zeros((n, panel), dtype)
+        Wp = jnp.zeros((n, panel), dtype)
+
+        def col_body(jj, inner):
+            Vp, Wp, V, tau = inner
+            j = c0 + jj
+            active = j < n_cols
+            # column j refreshed with the panel's pending rank-2b updates
+            colM = M[:, j]
+            col = colM - Vp @ Wp[j, :] - Wp @ Vp[j, :]
+            v, tj, _ = householder_masked(col, j + 1)
+            tj = jnp.where(active, tj, 0.0)
+            # w = tau (A v - Vp (Wp^T v) - Wp (Vp^T v))
+            w = M @ v - Vp @ (Wp.T @ v) - Wp @ (Vp.T @ v)
+            w = tj * w
+            w = w - (0.5 * tj * (v @ w)) * v
+            Vp = Vp.at[:, jj].set(jnp.where(active, v, 0.0))
+            Wp = Wp.at[:, jj].set(jnp.where(active, w, 0.0))
+            V = V.at[:, j].set(jnp.where(active, v, V[:, j]))
+            tau = tau.at[j].set(tj)
+            return Vp, Wp, V, tau
+
+        Vp, Wp, V, tau = jax.lax.fori_loop(0, panel, col_body,
+                                           (Vp, Wp, V, tau))
+        # BLAS-3 trailing update (the SYR2K the TPU kernel owns)
+        M = M - Vp @ Wp.T - Wp @ Vp.T
+        return M, V, tau
+
+    V0 = jnp.zeros((n, n), dtype)
+    tau0 = jnp.zeros((n,), dtype)
+    if n_panels:
+        M, V, tau = jax.lax.fori_loop(0, n_panels, panel_body,
+                                      (C, V0, tau0))
+    else:
+        M, V, tau = C, V0, tau0
+    d, e = extract_tridiag(M)
+    return TridiagResult(d=d, e=e, V=V, tau=tau)
+
+
+def apply_q(res: TridiagResult, Z: jax.Array) -> jax.Array:
+    """TD3 — Y := Q Z, applying the stored reflectors (DORMTR analogue).
+
+    Q = H_0 H_1 ... H_{n-3}, so Y = H_0 (H_1 (... (H_{n-3} Z))).
+    """
+    n = res.V.shape[0]
+
+    def body(i, Z):
+        j = n - 3 - i  # reversed order
+        v = res.V[:, j]
+        tj = res.tau[j]
+        Z = Z - tj * jnp.outer(v, v @ Z)
+        return Z
+
+    if n < 3:
+        return Z
+    return jax.lax.fori_loop(0, n - 2, body, Z)
+
+
+def apply_qt(res: TridiagResult, Z: jax.Array) -> jax.Array:
+    """Y := Q^T Z (forward reflector order)."""
+    n = res.V.shape[0]
+
+    def body(j, Z):
+        v = res.V[:, j]
+        tj = res.tau[j]
+        return Z - tj * jnp.outer(v, v @ Z)
+
+    if n < 3:
+        return Z
+    return jax.lax.fori_loop(0, n - 2, body, Z)

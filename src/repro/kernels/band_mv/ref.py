@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the symmetric band matrix-vector product.
+
+Band storage: ``band`` is (n, w+1); band[i, d] = A[i, i+d] for d = 0..w
+(upper diagonals; symmetric A implied). Entries past the matrix edge are 0.
+"""
+import jax.numpy as jnp
+
+
+def band_to_dense(band):
+    n, wp1 = band.shape
+    A = jnp.zeros((n, n), band.dtype)
+    for d in range(wp1):
+        diag = band[: n - d, d]
+        A = A + jnp.diag(diag, d)
+        if d > 0:
+            A = A + jnp.diag(diag, -d)
+    return A
+
+
+def dense_to_band(A, w):
+    n = A.shape[0]
+    cols = []
+    for d in range(w + 1):
+        diag = jnp.diagonal(A, offset=d)
+        cols.append(jnp.pad(diag, (0, d)))
+    return jnp.stack(cols, axis=1)
+
+
+def band_mv_ref(band, x):
+    return band_to_dense(band) @ x

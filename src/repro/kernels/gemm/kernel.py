@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: MXU-tiled GEMM with K-reduction in the grid.
+
+This is the BLAS-3 workhorse of the paper's pipelines — the Q1 accumulation
+of variant TT (two GEMMs per panel), the SYRK trailing updates of blocked
+Cholesky, and TT4/TD3 back-transforms all reduce to it.
+
+Grid (mi, ni, ki) with ki innermost: the (bm, bn) accumulator tile lives in a
+VMEM scratch across the whole K loop (no HBM round-trips), initialized at
+ki == 0 and emitted at ki == nk-1. Accumulation runs in float32 for
+bf16/f16/f32 inputs (MXU-native mixed precision), f64 stays f64 (interpret /
+CPU path for the double-precision solvers).
+
+Default tiles (256, 256, 512) in f32: A-tile 512 KiB + B-tile 512 KiB +
+acc 256 KiB ~ 1.3 MiB — double-bufferable in 16 MiB VMEM, all dims multiples
+of the (128, 128) MXU face.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, out_dtype):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def gemm_pallas(A: jax.Array, B: jax.Array, bm: int = 256, bn: int = 256,
+                bk: int = 512, interpret: bool = True) -> jax.Array:
+    """C = A @ B; shapes must be multiples of the tiles (ops.py pads)."""
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    acc_dtype = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, out_dtype=A.dtype),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), A.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(A, B)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tiled GEMM kernel."""
+import jax.numpy as jnp
+
+
+def gemm_ref(A, B):
+    return A @ B
+
+
+def gemm_accum_ref(C, A, B, alpha=1.0):
+    """C + alpha * A @ B (the Q1-accumulation / trailing-update form)."""
+    return C + alpha * (A @ B)

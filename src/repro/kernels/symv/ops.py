@@ -1,0 +1,40 @@
+"""Jitted public wrapper for the symv kernel: padding + device dispatch.
+
+On CPU (this container) the kernel body executes in interpret mode — the
+Python-level oracle of the TPU lowering. On a real TPU backend set
+``interpret=False`` (the default flips automatically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import symv_pallas
+from .ref import symv_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "force_interpret"))
+def symv(A: jax.Array, x: jax.Array, block: int = 256,
+         force_interpret: bool | None = None) -> jax.Array:
+    """y = A x for symmetric A via the one-triangle Pallas kernel.
+
+    Pads n up to a multiple of `block` (zero padding is exact for symv).
+    """
+    n = A.shape[0]
+    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+    block = min(block, max(8, 1 << (n - 1).bit_length()))
+    pad = (-n) % block
+    if pad:
+        A = jnp.pad(A, ((0, pad), (0, pad)))
+        x = jnp.pad(x, (0, pad))
+    y = symv_pallas(A, x, block=block, interpret=interpret)
+    return y[:n]
+
+
+__all__ = ["symv", "symv_ref"]

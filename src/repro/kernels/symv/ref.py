@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the symmetric matrix-vector product (KE1 / KI2).
+
+The contract: A is symmetric (only its upper triangle is *semantically*
+needed — the kernel reads one triangle; the oracle may read all of it).
+"""
+import jax.numpy as jnp
+
+
+def symv_ref(A, x):
+    return A @ x
+
+
+def symv_upper_ref(A, x):
+    """Oracle that provably uses only the upper triangle (tests feed garbage
+    into the strictly-lower part to verify the kernel's one-triangle claim)."""
+    U = jnp.triu(A)
+    strict = jnp.triu(A, 1)
+    return U @ x + strict.T @ x

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the symmetric rank-2k trailing update (TD1/GS2)."""
+
+
+def syr2k_ref(C, V, W, alpha=-1.0):
+    """C + alpha*(V W^T + W V^T) — the tridiagonalization trailing update."""
+    return C + alpha * (V @ W.T + W @ V.T)

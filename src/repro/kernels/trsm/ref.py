@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked triangular solve (GS2 / BT1 / KI1 / KI3)."""
+import jax
+
+
+def trsm_ref(U, B, trans: bool = False):
+    """Solve U^T X = B (trans=True) or U X = B (trans=False), U upper tri."""
+    return jax.scipy.linalg.solve_triangular(U, B, trans=1 if trans else 0,
+                                             lower=False)

@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + decode with the sharded KV cache.
+
+CPU-scale usage (examples/ wraps this):
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.models.model import (decode_step, encode, forward,
+                                init_decode_state, init_params)
+from repro.train.train_step import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    B = args.batch
+    prompt = jax.random.randint(jax.random.fold_in(key, 1),
+                                (B, args.prompt_len), 0, cfg.vocab_size,
+                                jnp.int32)
+    memory = None
+    if cfg.encoder_decoder:
+        memory = encode(params, jax.random.normal(
+            jax.random.fold_in(key, 2), (B, args.prompt_len, cfg.d_model),
+            jnp.float32), cfg)
+
+    serve = jax.jit(make_serve_step(cfg))
+    state = init_decode_state(cfg, B,
+                              capacity=args.prompt_len + args.gen,
+                              memory=memory)
+
+    # prefill by stepping the prompt through the decode path (keeps one
+    # compiled program; a production server would lower a bulk prefill too)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, state = serve(params, prompt[:, t:t + 1], state)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # greedy decode
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, state = serve(params, tok, state)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_gen = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    tps = (args.gen - 1) * B / max(t_gen, 1e-9)
+    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill={t_prefill:.2f}s decode={t_gen:.2f}s "
+          f"throughput={tps:.1f} tok/s")
+    print("sample token ids:", [int(t) for t in gen[0, :8]])
+    assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab_size))
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere — shapes come from jax.eval_shape over the
+real init functions, shardings are attached directly to the structs (the
+pattern AOT .lower() consumes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.dist.partitioning import (batch_shardings, decode_state_shardings,
+                                     opt_state_shardings, param_shardings,
+                                     replicated)
+from repro.models.config import ModelConfig, ShapeConfig, shape_by_name
+from repro.models.model import init_decode_state, init_params
+from repro.train.train_step import init_train_state
+
+
+def _with_shardings(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        shapes, shardings)
+
+
+def train_specs(mesh, cfg: ModelConfig, shape: ShapeConfig):
+    """(state_specs, batch_specs) for train_step lowering."""
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(
+        functools.partial(init_train_state, cfg=cfg), key)
+    from repro.train.train_step import TrainState
+    p_sh = param_shardings(mesh, state_shape.params)
+    o_sh = opt_state_shardings(mesh, state_shape.opt)
+    state_sharding = TrainState(params=p_sh, opt=o_sh,
+                                step=replicated(mesh, state_shape.step))
+    state_specs = _with_shardings(state_shape, state_sharding)
+
+    B, S = shape.global_batch, shape.seq_len
+    batch_shape = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.encoder_decoder:
+        batch_shape["embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.float32)
+    b_sh = batch_shardings(mesh, batch_shape)
+    batch_specs = _with_shardings(batch_shape, b_sh)
+    return state_specs, batch_specs
+
+
+def serve_specs(mesh, cfg: ModelConfig, shape: ShapeConfig,
+                fsdp_params: bool = True):
+    """(param_specs, token_specs, state_specs) for serve_step lowering.
+
+    The decode cell means: one new token against a KV history of
+    ``shape.seq_len`` (capacity = seq_len ring buffers).
+
+    fsdp_params=False is the serving-optimized sharding (§Perf iteration 1):
+    weights replicated over the DP axes + TP-sharded over 'model', so no
+    per-token parameter all-gathers — decode reads weights from local HBM.
+    """
+    key = jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    params_shape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), key)
+    p_sh = param_shardings(mesh, params_shape, fsdp=fsdp_params)
+    param_specs = _with_shardings(params_shape, p_sh)
+
+    memory_shape = None
+    if cfg.encoder_decoder:
+        memory_shape = jax.ShapeDtypeStruct(
+            (B, min(S, 4096), cfg.d_model), jnp.dtype(cfg.dtype))
+    state_shape = jax.eval_shape(
+        lambda: init_decode_state(cfg, B, capacity=S, memory=memory_shape
+                                  if memory_shape is None else
+                                  jnp.zeros(memory_shape.shape,
+                                            memory_shape.dtype)))
+    s_sh = decode_state_shardings(mesh, state_shape)
+    state_specs = _with_shardings(state_shape, s_sh)
+
+    tok_shape = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    t_sh = batch_shardings(mesh, tok_shape)
+    token_specs = _with_shardings(tok_shape, t_sh)["tokens"]
+    return param_specs, token_specs, state_specs
+
+
+def prefill_specs(mesh, cfg: ModelConfig, shape: ShapeConfig):
+    """(param_specs, batch_specs) for the prefill lowering."""
+    key = jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    params_shape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), key)
+    p_sh = param_shardings(mesh, params_shape)
+    param_specs = _with_shardings(params_shape, p_sh)
+    batch_shape = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch_shape["embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.float32)
+    b_sh = batch_shardings(mesh, batch_shape)
+    batch_specs = _with_shardings(batch_shape, b_sh)
+    return param_specs, batch_specs

@@ -1,0 +1,115 @@
+"""End-to-end training driver: data pipeline -> jitted step -> checkpoints,
+auto-resume, straggler monitoring, and paper-technique spectral probes.
+
+CPU-scale usage (examples/ wraps this):
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
+        --steps 200 --batch 8 --seq 128
+On a real cluster the same driver runs under the production mesh with the
+shardings from dist/partitioning.py (see dryrun.py, which lowers exactly
+this step function at full scale).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data.tokens import DataConfig, TokenPipeline
+from repro.dist import checkpoint as ckpt
+from repro.dist.straggler import StragglerMonitor
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--spectral-every", type=int, default=0,
+                    help="Lanczos curvature probe period (0 = off)")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                              decay_steps=args.steps)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch,
+                                    seed=args.seed))
+    key = jax.random.PRNGKey(args.seed)
+    state = init_train_state(key, cfg)
+    start_step = 0
+
+    if args.ckpt_dir:
+        restored = ckpt.load_latest(args.ckpt_dir, state)
+        if restored is not None:
+            start_step, state, extra = restored
+            pipe.seek(extra.get("cursor", start_step))
+            print(f"resumed from step {start_step}", flush=True)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    monitor = StragglerMonitor(n_hosts=1)
+
+    def batch_to_dev(b):
+        out = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.encoder_decoder:
+            out["embeds"] = jax.random.normal(
+                jax.random.fold_in(key, pipe.step),
+                (args.batch, args.seq, cfg.d_model), jnp.float32)
+        return out
+
+    losses = []
+    for step in range(start_step, args.steps):
+        t0 = time.perf_counter()
+        batch = batch_to_dev(pipe.next_batch())
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.record(0, dt)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step={step} loss={float(metrics['loss']):.4f} "
+                  f"nll={float(metrics['nll']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} dt={dt*1e3:.0f}ms",
+                  flush=True)
+        if args.spectral_every and step % args.spectral_every == 0:
+            from repro.train.loss import ce_loss
+            from repro.models.model import forward
+            from repro.train.spectral import curvature_spectrum
+
+            def probe_loss(params, b):
+                logits, _ = forward(params, b["tokens"], cfg, remat=False)
+                return ce_loss(logits, b["labels"])[0]
+
+            spec = curvature_spectrum(probe_loss, state.params, batch, m=16)
+            print(f"  [spectral] sharpness={spec['sharpness']:.3e} "
+                  f"lambda_min={spec['lambda_min']:.3e}", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, state,
+                      extra={"cursor": pipe.step})
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, state,
+                  extra={"cursor": pipe.step})
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"loss first10={first:.4f} last10={last:.4f} "
+          f"improved={bool(last < first)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Core layer primitives — pure-functional JAX (params are nested dicts).
+
+Initialization is explicit (PRNG keys threaded); forward passes are pure.
+Dtype policy: params stored in ``param_dtype`` (f32 master), compute in
+``dtype`` (bf16 on the TPU target), losses in f32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------- linear --
+
+def init_linear(key, d_in: int, d_out: int, cfg: ModelConfig,
+                bias: bool = False) -> Params:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), pdtype(cfg)) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), pdtype(cfg))
+    return p
+
+
+def linear(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    y = x @ p["w"].astype(cdtype(cfg))
+    if "b" in p:
+        y = y + p["b"].astype(cdtype(cfg))
+    return y
+
+
+# ---------------------------------------------------------------- rmsnorm --
+
+def init_rmsnorm(d: int, cfg: ModelConfig) -> Params:
+    return {"g": jnp.ones((d,), pdtype(cfg))}
+
+
+def rmsnorm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------- embedding --
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    e = jax.random.normal(key, (cfg.vocab_size, cfg.d_model), pdtype(cfg))
+    return {"table": e * (cfg.d_model ** -0.5)}
+
+
+def embed(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["table"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits in f32 (loss numerics)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# ------------------------------------------------------------------- rope --
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------- chunked sequence scan
+
+def chunked_scan(step, init, xs, chunk: int, remat: bool = True):
+    """scan(step, init, xs) restructured as scan-of-scans.
+
+    Storage for the backward pass drops from O(S) carries to O(S/chunk)
+    outer carries (+ O(chunk) recomputed inside each checkpointed inner
+    scan) — the standard two-level checkpointing that makes long-sequence
+    recurrent layers (mamba/xlstm) trainable at 4k+ tokens.
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, S)
+    if S % chunk:
+        # fall back to the flat scan for ragged sizes (tests/small shapes)
+        return jax.lax.scan(step, init, xs)
+    nc = S // chunk
+    xs_c = jax.tree.map(lambda x: x.reshape(nc, chunk, *x.shape[1:]), xs)
+
+    def inner(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    outer_body = jax.checkpoint(inner) if remat else inner
+
+    def outer(carry, xc):
+        return outer_body(carry, xc)
+
+    carry, ys_c = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape(nc * chunk, *y.shape[2:]), ys_c)
+    return carry, ys
+
+
+# ----------------------------------------------------------------- swiglu --
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, cfg.d_model, d_ff, cfg),
+        "up": init_linear(k2, cfg.d_model, d_ff, cfg),
+        "down": init_linear(k3, d_ff, cfg.d_model, cfg),
+    }
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    g = jax.nn.silu(linear(p["gate"], x, cfg))
+    u = linear(p["up"], x, cfg)
+    return linear(p["down"], g * u, cfg)

@@ -1,0 +1,323 @@
+"""Model assembly: embeddings -> (scan over layer super-blocks) -> logits.
+
+Heterogeneous layer patterns (jamba 7:1 mamba:attn, gemma3 5:1 local:global,
+xlstm mlstm/slstm mix) are handled by scanning over the *repeating period*:
+layer params are stored as P stacked pytrees (P = period length), the scan
+runs over the R = n_layers // P repetitions, and any remainder layers are
+executed unrolled ("tail"). This keeps the HLO O(period) instead of
+O(n_layers) — essential for 62..88-layer configs compiled for 512 devices.
+
+Both paths are provided:
+  * ``forward``      — full-sequence (train / prefill)
+  * ``decode_step``  — one token with per-layer caches/states (ring-buffer KV
+    for attention layers, O(1) states for mamba/xlstm)
+Encoder-decoder (seamless) adds ``encode`` and cross-attention in the
+decoder layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (LayerKVCache, attention, attention_decode,
+                        init_attention, init_layer_cache)
+from .config import ModelConfig
+from .layers import (Params, cdtype, embed, init_embedding, init_mlp,
+                     init_rmsnorm, mlp, rmsnorm, unembed)
+from .moe import init_moe, moe_ffn
+from .ssm import (MambaState, init_mamba, init_mamba_state, mamba,
+                  mamba_decode)
+from .xlstm import (MLSTMState, SLSTMState, init_mlstm, init_mlstm_state,
+                    init_slstm, init_slstm_state, mlstm, mlstm_decode, slstm,
+                    slstm_decode)
+
+ATTN_KINDS = ("attn", "local", "global")
+
+
+def _period(cfg: ModelConfig) -> int:
+    kinds = cfg.layer_kinds()
+    if cfg.block_pattern:
+        p = len(cfg.block_pattern)
+    elif cfg.local_global_ratio > 0:
+        p = cfg.local_global_ratio + 1
+    elif cfg.xlstm:
+        p = 4
+    else:
+        p = 1
+    return min(p, len(kinds))
+
+
+def layer_plan(cfg: ModelConfig) -> tuple[tuple[str, ...], int, int, int]:
+    """(kinds, period P, repeats R, tail length)."""
+    kinds = cfg.layer_kinds()
+    P = _period(cfg)
+    if cfg.is_moe and cfg.moe_every > 1:
+        # scan positions must have a fixed FFN type across repetitions
+        assert P % cfg.moe_every == 0, (P, cfg.moe_every)
+    R = len(kinds) // P
+    tail = len(kinds) - P * R
+    return kinds, P, R, tail
+
+
+# --------------------------------------------------------------- init -----
+
+def _init_layer(key, cfg: ModelConfig, kind: str, fkind: str) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model, cfg)}
+    if kind in ATTN_KINDS:
+        p["attn"] = init_attention(ks[0], cfg)
+        if cfg.encoder_decoder:
+            p["lnx"] = init_rmsnorm(cfg.d_model, cfg)
+            p["xattn"] = init_attention(ks[1], cfg, cross=True)
+    elif kind == "mamba":
+        p["mamba"] = init_mamba(ks[0], cfg)
+    elif kind == "slstm":
+        p["cell"] = init_slstm(ks[0], cfg)
+    elif kind == "mlstm":
+        p["cell"] = init_mlstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if fkind != "none":
+        p["ln2"] = init_rmsnorm(cfg.d_model, cfg)
+        p["ffn"] = init_moe(ks[2], cfg) if fkind == "moe" \
+            else init_mlp(ks[2], cfg)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_rmsnorm(cfg.d_model, cfg),
+        "ffn": init_mlp(ks[1], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    kinds, P, R, tail = layer_plan(cfg)
+    fkinds = cfg.ffn_kinds()
+    ke, kl, kt, kf, kenc = jax.random.split(key, 5)
+    params: Params = {"embed": init_embedding(ke, cfg),
+                      "ln_f": init_rmsnorm(cfg.d_model, cfg)}
+    # stacked period blocks: params["blocks"][i] has leaves (R, ...)
+    blocks = []
+    for i in range(P):
+        per_rep = [
+            _init_layer(jax.random.fold_in(kl, r * P + i), cfg, kinds[i],
+                        fkinds[i])
+            for r in range(R)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    params["blocks"] = tuple(blocks)
+    params["tail"] = tuple(
+        _init_layer(jax.random.fold_in(kt, t), cfg, kinds[P * R + t],
+                    fkinds[P * R + t])
+        for t in range(tail)
+    )
+    if cfg.encoder_decoder:
+        params["encoder"] = tuple(
+            _init_encoder_layer(jax.random.fold_in(kenc, i), cfg)
+            for i in range(cfg.n_encoder_layers)
+        )
+        params["ln_enc"] = init_rmsnorm(cfg.d_model, cfg)
+    return params
+
+
+# ------------------------------------------------------------- forward ----
+
+def _layer_fwd(p: Params, x: jax.Array, cfg: ModelConfig, kind: str,
+               fkind: str, aux: jax.Array,
+               memory: Optional[jax.Array]) -> tuple:
+    h = rmsnorm(p["ln1"], x, cfg)
+    if kind in ATTN_KINDS:
+        window = cfg.sliding_window if kind == "local" else None
+        x = x + attention(p["attn"], h, cfg, window=window)
+        if cfg.encoder_decoder and memory is not None:
+            hx = rmsnorm(p["lnx"], x, cfg)
+            x = x + attention(p["xattn"], hx, cfg, kv_src=memory,
+                              causal=False)
+    elif kind == "mamba":
+        x = x + mamba(p["mamba"], h, cfg)
+    elif kind == "slstm":
+        x = x + slstm(p["cell"], h, cfg)
+    elif kind == "mlstm":
+        x = x + mlstm(p["cell"], h, cfg)
+    if fkind != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg)
+        if fkind == "moe":
+            f, a = moe_ffn(p["ffn"], h2, cfg)
+            aux = aux + a
+        else:
+            f = mlp(p["ffn"], h2, cfg)
+        x = x + f
+    return x, aux
+
+
+def encode(params: Params, embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Encoder stack (enc-dec models); embeds (B, S_enc, D) from the
+    frontend stub."""
+    x = embeds.astype(cdtype(cfg))
+    for p in params["encoder"]:
+        h = rmsnorm(p["ln1"], x, cfg)
+        x = x + attention(p["attn"], h, cfg, causal=False)
+        x = x + mlp(p["ffn"], rmsnorm(p["ln2"], x, cfg), cfg)
+    return rmsnorm(params["ln_enc"], x, cfg)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            memory: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            remat: bool = True,
+            unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence pass -> (logits (B,S,V) f32, moe aux loss scalar)."""
+    kinds, P, R, tail = layer_plan(cfg)
+    fkinds = cfg.ffn_kinds()
+    if embeds is not None:
+        x = embeds.astype(cdtype(cfg))
+    else:
+        x = embed(params["embed"], tokens, cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def superblock(carry, block_slice):
+        x, aux = carry
+        for i in range(P):
+            x, aux = _layer_fwd(block_slice[i], x, cfg, kinds[i], fkinds[i],
+                                aux, memory)
+        return (x, aux), None
+
+    sb = jax.checkpoint(superblock) if remat else superblock
+    if R > 0 and not unroll:
+        (x, aux), _ = jax.lax.scan(sb, (x, aux0), params["blocks"])
+    elif R > 0:
+        # analysis mode: python loop (exact XLA cost_analysis; see
+        # analysis/loop_correct.py — scan bodies are otherwise counted once)
+        aux = aux0
+        for r in range(R):
+            blk = jax.tree.map(lambda v: v[r], params["blocks"])
+            (x, aux), _ = sb((x, aux), blk)
+    else:
+        aux = aux0
+    for t in range(tail):
+        x, aux = _layer_fwd(params["tail"][t], x, cfg, kinds[P * R + t],
+                            fkinds[P * R + t], aux, memory)
+    x = rmsnorm(params["ln_f"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------- decode --
+
+class DecodeState(NamedTuple):
+    block_caches: Tuple[Any, ...]   # per period position, leaves stacked (R,)
+    tail_caches: Tuple[Any, ...]
+    pos: jax.Array                  # scalar int32: next position to write
+    memory: Optional[jax.Array] = None  # enc-dec cross-attention memory
+
+
+def _kind_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int):
+    if kind in ATTN_KINDS:
+        cap = capacity if kind != "local" else min(
+            capacity, cfg.sliding_window or capacity)
+        return init_layer_cache(cfg, batch, cap)
+    if kind == "mamba":
+        return init_mamba_state(cfg, batch)
+    if kind == "slstm":
+        return init_slstm_state(cfg, batch)
+    if kind == "mlstm":
+        return init_mlstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
+                      memory: Optional[jax.Array] = None) -> DecodeState:
+    kinds, P, R, tail = layer_plan(cfg)
+    blocks = []
+    for i in range(P):
+        per_rep = [_kind_cache(cfg, kinds[i], batch, capacity)
+                   for _ in range(R)]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    tails = tuple(_kind_cache(cfg, kinds[P * R + t], batch, capacity)
+                  for t in range(tail))
+    return DecodeState(block_caches=tuple(blocks), tail_caches=tails,
+                       pos=jnp.zeros((), jnp.int32), memory=memory)
+
+
+def _layer_dec(p: Params, x: jax.Array, cache, pos, cfg: ModelConfig,
+               kind: str, fkind: str, memory) -> tuple:
+    h = rmsnorm(p["ln1"], x, cfg)
+    if kind in ATTN_KINDS:
+        window = cfg.sliding_window if kind == "local" else None
+        y, cache = attention_decode(p["attn"], h, cache, pos, cfg,
+                                    window=window)
+        x = x + y
+        if cfg.encoder_decoder and memory is not None:
+            hx = rmsnorm(p["lnx"], x, cfg)
+            x = x + attention(p["xattn"], hx, cfg, kv_src=memory,
+                              causal=False)
+    elif kind == "mamba":
+        y, cache = mamba_decode(p["mamba"], h, cache, cfg)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = slstm_decode(p["cell"], h, cache, cfg)
+        x = x + y
+    elif kind == "mlstm":
+        y, cache = mlstm_decode(p["cell"], h, cache, cfg)
+        x = x + y
+    if fkind != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg)
+        if fkind == "moe":
+            f, _ = moe_ffn(p["ffn"], h2, cfg, no_drop=True)
+        else:
+            f = mlp(p["ffn"], h2, cfg)
+        x = x + f
+    return x, cache
+
+
+def decode_step(params: Params, tokens: jax.Array, state: DecodeState,
+                cfg: ModelConfig,
+                unroll: bool = False) -> tuple[jax.Array, DecodeState]:
+    """tokens (B, 1) -> (logits (B, 1, V), new state)."""
+    kinds, P, R, tail = layer_plan(cfg)
+    fkinds = cfg.ffn_kinds()
+    x = embed(params["embed"], tokens, cfg)
+    pos = state.pos
+
+    def superblock(carry, scanned):
+        x = carry
+        block_slice, cache_slice = scanned
+        new_caches = []
+        for i in range(P):
+            x, c = _layer_dec(block_slice[i], x, cache_slice[i], pos, cfg,
+                              kinds[i], fkinds[i], state.memory)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if R > 0 and not unroll:
+        x, new_block_caches = jax.lax.scan(
+            superblock, x, (params["blocks"], state.block_caches))
+    elif R > 0:
+        caches_out = []
+        for r in range(R):
+            blk = jax.tree.map(lambda v: v[r], params["blocks"])
+            cch = jax.tree.map(lambda v: v[r], state.block_caches)
+            x, c = superblock(x, (blk, cch))
+            caches_out.append(c)
+        new_block_caches = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *caches_out)
+    else:
+        new_block_caches = state.block_caches
+    new_tails = []
+    for t in range(tail):
+        x, c = _layer_dec(params["tail"][t], x, state.tail_caches[t], pos,
+                          cfg, kinds[P * R + t], fkinds[P * R + t],
+                          state.memory)
+        new_tails.append(c)
+    x = rmsnorm(params["ln_f"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, DecodeState(block_caches=new_block_caches,
+                               tail_caches=tuple(new_tails), pos=pos + 1,
+                               memory=state.memory)

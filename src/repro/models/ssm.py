@@ -1,0 +1,133 @@
+"""Mamba-style selective SSM block (jamba's 'mamba' layers).
+
+Selective state-space recurrence (Gu & Dao, arXiv:2312.00752) with input-
+dependent (dt, B, C). Implemented as an associative-scan-friendly diagonal
+recurrence: h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ; y_t = C_t h_t.
+We use ``jax.lax.scan`` over the sequence (training/prefill) and an O(1)
+single-step update for decode — the property that makes jamba's long_500k
+cell feasible where full attention is not.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Params, cdtype, chunked_scan, init_linear,
+                     linear, pdtype)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": init_linear(ks[0], d, 2 * d_in, cfg),     # x and gate z
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_dim, d_in),
+                                    pdtype(cfg)) * 0.2,
+        "conv_b": jnp.zeros((d_in,), pdtype(cfg)),
+        "bc_proj": init_linear(ks[2], d_in, 2 * n, cfg),     # B_t, C_t
+        "dt_proj": init_linear(ks[3], d_in, d_in, cfg, bias=True),
+        "A_log": jnp.log(jnp.arange(1, n + 1, dtype=pdtype(cfg))
+                         )[None, :].repeat(d_in, 0),         # (d_in, n)
+        "D": jnp.ones((d_in,), pdtype(cfg)),
+        "out_proj": init_linear(ks[4], d_in, d, cfg),
+    }
+    return p
+
+
+class MambaState(NamedTuple):
+    h: jax.Array        # (B, d_in, n) SSM state
+    conv: jax.Array     # (B, conv_dim-1, d_in) trailing inputs for the conv
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=None) -> MambaState:
+    d_in = cfg.ssm_expand * cfg.d_model
+    dt = dtype or cdtype(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, d_in, cfg.ssm_state_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_dim - 1, d_in), dt),
+    )
+
+
+def _ssm_params(p: Params, xz: jax.Array, cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    x, z = xz[..., :d_in], xz[..., d_in:]
+    return x, z
+
+
+def _causal_conv(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over sequence; x (B, S, d_in)."""
+    k = cfg.ssm_conv_dim
+    w = p["conv_w"].astype(x.dtype)     # (k, d_in)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)     # (B, S+k-1, d_in)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    out = out + p["conv_b"].astype(x.dtype)[None, None, :]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence pass; x (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    n = cfg.ssm_state_dim
+    xz = linear(p["in_proj"], x, cfg)
+    xs, z = _ssm_params(p, xz, cfg)
+    xs, _ = _causal_conv(p, xs, cfg)
+
+    bc = linear(p["bc_proj"], xs, cfg).astype(jnp.float32)   # (B,S,2n)
+    Bt, Ct = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(linear(p["dt_proj"], xs, cfg)
+                         .astype(jnp.float32))                # (B,S,d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (d_in, n)
+    xf = xs.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs   # (B,d_in) (B,d_in) (B,n) (B,n)
+        decay = jnp.exp(dtt[..., None] * A[None])             # (B,d_in,n)
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, d_in, n), jnp.float32)
+    _, ys = chunked_scan(step, h0,
+                         (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+                          jnp.moveaxis(Bt, 1, 0), jnp.moveaxis(Ct, 1, 0)),
+                         chunk=128)
+    y = jnp.moveaxis(ys, 0, 1) + xf * p["D"].astype(jnp.float32)[None, None]
+    y = (y.astype(cdtype(cfg)) * jax.nn.silu(z))
+    return linear(p["out_proj"], y, cfg)
+
+
+def mamba_decode(p: Params, x: jax.Array, state: MambaState,
+                 cfg: ModelConfig) -> Tuple[jax.Array, MambaState]:
+    """Single-token decode; x (B, 1, D). O(1) state update."""
+    B, _, D = x.shape
+    d_in = cfg.ssm_expand * D
+    n = cfg.ssm_state_dim
+    xz = linear(p["in_proj"], x, cfg)
+    xs, z = _ssm_params(p, xz, cfg)
+    xs, conv_state = _causal_conv(p, xs, cfg, state=state.conv)
+
+    bc = linear(p["bc_proj"], xs, cfg).astype(jnp.float32)
+    Bt, Ct = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(linear(p["dt_proj"], xs, cfg).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xf = xs.astype(jnp.float32)
+
+    decay = jnp.exp(dt[:, 0, :, None] * A[None])
+    h = decay * state.h + (dt[:, 0] * xf[:, 0])[..., None] * Bt[:, 0][:, None]
+    y = jnp.einsum("bdn,bn->bd", h, Ct[:, 0])[:, None, :]
+    y = y + xf * p["D"].astype(jnp.float32)[None, None]
+    y = (y.astype(cdtype(cfg)) * jax.nn.silu(z))
+    return linear(p["out_proj"], y, cfg), MambaState(h=h, conv=conv_state)

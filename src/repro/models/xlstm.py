@@ -1,0 +1,204 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+The xlstm-125m config has d_ff = 0 — FFN capacity lives inside the blocks via
+the pre-up-projection (factor ``xlstm_proj_factor``). Both blocks expose a
+full-sequence scan path and an O(1) decode step; like the Mamba layers this
+is what makes the long_500k cell run where full attention cannot.
+
+mLSTM: per-head matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T, query read
+h_t = C_t q_t / max(|n_t^T q_t|, 1) with exponential gating stabilized by the
+max-state m_t (as in the paper, App. A).
+sLSTM: scalar-memory cells with exponential input gates and the same
+stabilizer, block-diagonal recurrent weights (per-head).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Params, cdtype, chunked_scan, init_linear,
+                     linear, pdtype)
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    n_h = cfg.n_heads
+    d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+    # round head dim down to keep shapes consistent
+    hd = d_in // n_h
+    return n_h, hd
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    n_h, hd = _heads(cfg)
+    d_in = n_h * hd
+    ks = jax.random.split(key, 7)
+    return {
+        "up": init_linear(ks[0], d, 2 * d_in, cfg),           # x and gate z
+        "q": init_linear(ks[1], d_in, d_in, cfg),
+        "k": init_linear(ks[2], d_in, d_in, cfg),
+        "v": init_linear(ks[3], d_in, d_in, cfg),
+        "ifg": init_linear(ks[4], d_in, 3 * n_h, cfg, bias=True),  # i, f, o
+        "down": init_linear(ks[5], d_in, d, cfg),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd) matrix memory
+    n: jax.Array   # (B, H, hd)    normalizer
+    m: jax.Array   # (B, H)        stabilizer (log domain)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    n_h, hd = _heads(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, n_h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, n_h, hd), jnp.float32),
+        m=jnp.full((batch, n_h), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_gates(p: Params, xu: jax.Array, cfg: ModelConfig, n_h: int):
+    g = linear(p["ifg"], xu, cfg).astype(jnp.float32)
+    i_, f_, o_ = jnp.split(g, 3, axis=-1)     # (..., H)
+    return i_, f_, o_
+
+
+def _mlstm_step(carry: MLSTMState, qkvifo, hd: int):
+    q, k, v, i_, f_, o_ = qkvifo    # q/k/v (B,H,hd); i/f/o (B,H)
+    C, n, m = carry
+    logf = -jax.nn.softplus(-f_)                 # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, i_)
+    fg = jnp.exp(logf + m - m_new)               # stabilized forget
+    ig = jnp.exp(i_ - m_new)                     # stabilized input
+    ks = k / (hd ** 0.5)
+    C = fg[..., None, None] * C + ig[..., None, None] * (
+        v[..., :, None] * ks[..., None, :])
+    n = fg[..., None] * n + ig[..., None] * ks
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = jax.nn.sigmoid(o_)[..., None] * num / den[..., None]
+    return MLSTMState(C, n, m_new), h
+
+
+def mlstm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, D = x.shape
+    n_h, hd = _heads(cfg)
+    d_in = n_h * hd
+    xu = linear(p["up"], x, cfg)
+    xin, z = xu[..., :d_in], xu[..., d_in:]
+    q = linear(p["q"], xin, cfg).reshape(B, S, n_h, hd).astype(jnp.float32)
+    k = linear(p["k"], xin, cfg).reshape(B, S, n_h, hd).astype(jnp.float32)
+    v = linear(p["v"], xin, cfg).reshape(B, S, n_h, hd).astype(jnp.float32)
+    i_, f_, o_ = _mlstm_gates(p, xin, cfg, n_h)
+
+    def step(carry, t):
+        return _mlstm_step(carry, t, hd)
+
+    st0 = init_mlstm_state(cfg, B)
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(i_, 1, 0), jnp.moveaxis(f_, 1, 0),
+          jnp.moveaxis(o_, 1, 0))
+    _, hs = chunked_scan(step, st0, xs, chunk=128)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_in).astype(cdtype(cfg))
+    return linear(p["down"], h * jax.nn.silu(z), cfg)
+
+
+def mlstm_decode(p: Params, x: jax.Array, state: MLSTMState,
+                 cfg: ModelConfig) -> Tuple[jax.Array, MLSTMState]:
+    B, _, D = x.shape
+    n_h, hd = _heads(cfg)
+    d_in = n_h * hd
+    xu = linear(p["up"], x, cfg)
+    xin, z = xu[..., :d_in], xu[..., d_in:]
+    q = linear(p["q"], xin, cfg).reshape(B, n_h, hd).astype(jnp.float32)
+    k = linear(p["k"], xin, cfg).reshape(B, n_h, hd).astype(jnp.float32)
+    v = linear(p["v"], xin, cfg).reshape(B, n_h, hd).astype(jnp.float32)
+    i_, f_, o_ = _mlstm_gates(p, xin[:, 0], cfg, n_h)
+    st, h = _mlstm_step(state, (q, k, v, i_, f_, o_), hd)
+    h = h.reshape(B, 1, d_in).astype(cdtype(cfg))
+    return linear(p["down"], h * jax.nn.silu(z), cfg), st
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    n_h, hd = _heads(cfg)
+    d_in = n_h * hd
+    ks = jax.random.split(key, 4)
+    scale = (1.0 / d_in) ** 0.5
+    return {
+        "up": init_linear(ks[0], d, 2 * d_in, cfg),
+        "wx": init_linear(ks[1], d_in, 4 * d_in, cfg, bias=True),  # i,f,z,o
+        # block-diagonal recurrent weights (per head): (H, hd, 4*hd)
+        "wr": jax.random.normal(ks[2], (n_h, hd, 4 * hd),
+                                pdtype(cfg)) * scale,
+        "down": init_linear(ks[3], d_in, d, cfg),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd)
+    n: jax.Array  # (B, H, hd)
+    h: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H, hd)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    n_h, hd = _heads(cfg)
+    z = jnp.zeros((batch, n_h, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+
+def _slstm_step(p: Params, carry: SLSTMState, gx, cfg: ModelConfig):
+    c, n, h, m = carry
+    wr = p["wr"].astype(jnp.float32)
+    gr = jnp.einsum("bhj,hjk->bhk", h, wr)           # (B,H,4hd)
+    g = gx + gr
+    hd = c.shape[-1]
+    gi, gf, gz, go = [g[..., k * hd:(k + 1) * hd] for k in range(4)]
+    logf = -jax.nn.softplus(-gf)
+    m_new = jnp.maximum(logf + m, gi)
+    fg = jnp.exp(logf + m - m_new)
+    ig = jnp.exp(gi - m_new)
+    c = fg * c + ig * jnp.tanh(gz)
+    n = fg * n + ig
+    h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h_new, m_new), h_new
+
+
+def slstm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, D = x.shape
+    n_h, hd = _heads(cfg)
+    d_in = n_h * hd
+    xu = linear(p["up"], x, cfg)
+    xin, z = xu[..., :d_in], xu[..., d_in:]
+    gx = linear(p["wx"], xin, cfg).reshape(B, S, n_h, 4 * hd) \
+        .astype(jnp.float32)
+
+    def step(carry, g):
+        return _slstm_step(p, carry, g, cfg)
+
+    _, hs = chunked_scan(step, init_slstm_state(cfg, B),
+                         jnp.moveaxis(gx, 1, 0), chunk=128)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_in).astype(cdtype(cfg))
+    return linear(p["down"], h * jax.nn.silu(z), cfg)
+
+
+def slstm_decode(p: Params, x: jax.Array, state: SLSTMState,
+                 cfg: ModelConfig) -> Tuple[jax.Array, SLSTMState]:
+    B, _, D = x.shape
+    n_h, hd = _heads(cfg)
+    d_in = n_h * hd
+    xu = linear(p["up"], x, cfg)
+    xin, z = xu[..., :d_in], xu[..., d_in:]
+    gx = linear(p["wx"], xin, cfg).reshape(B, n_h, 4 * hd).astype(jnp.float32)
+    st, h = _slstm_step(p, state, gx, cfg)
+    h = h.reshape(B, 1, d_in).astype(cdtype(cfg))
+    return linear(p["down"], h * jax.nn.silu(z), cfg), st

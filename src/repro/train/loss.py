@@ -1,0 +1,19 @@
+"""Cross-entropy LM loss with z-loss regularizer, f32 numerics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array,
+            z_loss_coef: float = 1e-4) -> tuple[jax.Array, dict]:
+    """logits (B, S, V) f32, labels (B, S) int32. Mean over all tokens."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - tgt
+    zl = z_loss_coef * (logz ** 2)
+    loss = jnp.mean(nll + zl)
+    metrics = {"nll": jnp.mean(nll), "z_loss": jnp.mean(zl),
+               "ppl_proxy": jnp.exp(jnp.minimum(jnp.mean(nll), 20.0))}
+    return loss, metrics

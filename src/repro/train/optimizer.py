@@ -1,0 +1,82 @@
+"""AdamW + cosine schedule + global-norm clipping, implemented natively.
+
+(No optax in this environment — the optimizer is part of the substrate the
+framework must own anyway.) State is a pytree mirroring params, so it shards
+with the same PartitionSpecs (ZeRO-style: optimizer state inherits the param
+sharding; with DP-sharded params this is the sharded-optimizer regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def init_opt_state(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return AdamWState(mu=zeros,
+                      nu=jax.tree.map(lambda p: jnp.zeros_like(p), params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    count = state.count + 1
+    lr = lr_schedule(count, cfg)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,80 @@
+"""Curvature spectrum probes — the paper's technique inside the trainer.
+
+Variant KI's defining move is Lanczos on an *implicit* operator (never
+materialize C, apply U^{-T} A U^{-1} per iteration). The training-time
+analogue is Lanczos on the loss Hessian via hessian-vector products: the
+operator is implicit (jvp-of-grad), symmetric, and only its extremal
+eigenpairs are wanted — exactly the GSYEIG s << n regime.
+
+``curvature_spectrum`` runs an m-step full-reorthogonalization Lanczos
+(no restarts — spectral density probes don't need ARPACK-grade residuals)
+and returns the extremal Ritz values, the standard sharpness diagnostic.
+The trainer exposes it via --spectral-every.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def make_hvp(loss_fn: Callable, params, batch):
+    """Returns (hvp(v), dim): implicit Hessian-vector operator (KI-style)."""
+    flat, unravel = ravel_pytree(params)
+
+    def loss_flat(p_flat):
+        return loss_fn(unravel(p_flat), batch)
+
+    @jax.jit
+    def hvp(v):
+        return jax.jvp(jax.grad(loss_flat), (flat,), (v,))[1]
+
+    return hvp, flat.shape[0]
+
+
+@partial(jax.jit, static_argnames=("matvec", "m"))
+def _lanczos_tridiag(matvec, v0: jax.Array, m: int):
+    """m-step Lanczos with full re-orthogonalization; returns (alpha, beta)."""
+    n = v0.shape[0]
+    V = jnp.zeros((n, m + 1), v0.dtype).at[:, 0].set(v0 / jnp.linalg.norm(v0))
+    alpha = jnp.zeros((m,), v0.dtype)
+    beta = jnp.zeros((m,), v0.dtype)
+
+    def body(j, carry):
+        V, alpha, beta = carry
+        w = matvec(V[:, j])
+        mask = (jnp.arange(m + 1) <= j).astype(v0.dtype)
+        h = (V.T @ w) * mask
+        w = w - V @ h
+        h2 = (V.T @ w) * mask
+        w = w - V @ h2
+        a = (h + h2)[j]
+        b = jnp.linalg.norm(w)
+        V = V.at[:, j + 1].set(w / jnp.maximum(b, 1e-30))
+        return V, alpha.at[j].set(a), beta.at[j].set(b)
+
+    V, alpha, beta = jax.lax.fori_loop(0, m, body, (V, alpha, beta))
+    return alpha, beta
+
+
+def curvature_spectrum(loss_fn: Callable, params, batch, m: int = 32,
+                       key=None) -> dict:
+    """Extremal Hessian Ritz values (sharpness / most-negative curvature)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    hvp, dim = make_hvp(loss_fn, params, batch)
+    v0 = jax.random.normal(key, (dim,), jnp.float32)
+    m = min(m, dim - 1)
+    alpha, beta = _lanczos_tridiag(hvp, v0, m)
+    T = (jnp.diag(alpha) + jnp.diag(beta[:m - 1], 1)
+         + jnp.diag(beta[:m - 1], -1))
+    theta = jnp.linalg.eigvalsh(T)
+    return {
+        "sharpness": float(theta[-1]),       # lambda_max(H)
+        "lambda_min": float(theta[0]),       # most negative curvature
+        "ritz_values": theta,
+        "dim": dim,
+    }

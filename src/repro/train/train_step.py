@@ -1,0 +1,83 @@
+"""The jittable train / serve step factories shared by the trainer, the
+smoke tests, and the multi-pod dry-run (which lowers exactly these).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import (DecodeState, decode_step, encode, forward,
+                                init_decode_state, init_params)
+from .loss import ce_loss
+from .optimizer import AdamWState, OptimizerConfig, adamw_update, \
+    init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=init_opt_state(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    aux_coef: float = 1e-2, remat: bool = True,
+                    unroll: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch = {"tokens": (B, S) int32, "labels": (B, S) int32}
+    (+ "embeds" (B, S_enc, D) for frontend-stub archs / enc-dec memory).
+    """
+
+    def loss_fn(params, batch):
+        memory = None
+        if cfg.encoder_decoder:
+            memory = encode(params, batch["embeds"], cfg)
+        logits, aux = forward(params, batch["tokens"], cfg, memory=memory,
+                              remat=remat, unroll=unroll)
+        loss, metrics = ce_loss(logits, batch["labels"])
+        loss = loss + aux_coef * aux
+        metrics["moe_aux"] = aux
+        return loss, metrics
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False):
+    """Returns serve_step(params, tokens (B,1), state) -> (logits, state) —
+    the one-new-token decode the decode_*/long_* dry-run cells lower."""
+
+    def serve_step(params, tokens, state: DecodeState):
+        return decode_step(params, tokens, state, cfg, unroll=unroll)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, unroll: bool = False):
+    def prefill(params, tokens, embeds: Optional[jax.Array] = None):
+        memory = None
+        if cfg.encoder_decoder:
+            memory = encode(params, embeds, cfg)
+        logits, _ = forward(params, tokens, cfg, memory=memory, remat=False,
+                            unroll=unroll)
+        return logits
+
+    return prefill

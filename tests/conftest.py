@@ -1,0 +1,9 @@
+import jax
+
+# The eigensolver core targets LAPACK-grade accuracy (paper Tables 3/7 are
+# ~1e-15): run the numeric tests in float64. Model smoke tests request their
+# dtypes explicitly so this does not affect them.
+# NOTE: do NOT set XLA_FLAGS / device counts here — the 512-device setup is
+# exclusive to launch/dryrun.py (see system design); multi-device tests spawn
+# subprocesses with their own XLA_FLAGS.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,277 @@
+"""Unit tests for every stage of the GSYEIG pipelines vs numpy/LAPACK oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    apply_q,
+    apply_qt,
+    back_transform_generalized,
+    band_to_tridiag,
+    bisect_eigenvalues,
+    cholesky_blocked,
+    cholesky_upper,
+    eigh_tridiag_selected,
+    inverse_iteration,
+    reduce_to_band,
+    sturm_count,
+    to_standard_sygst,
+    to_standard_two_trsm,
+    tridiagonalize,
+)
+from repro.core.linalg_utils import householder, householder_masked, qr_wy
+from repro.data.problems import dft_like, md_like
+
+
+def _rand_spd(n, key, jitter=None):
+    M = jax.random.normal(key, (n, n), jnp.float64)
+    B = M @ M.T + n * jnp.eye(n)
+    return 0.5 * (B + B.T)
+
+
+def _rand_sym(n, key):
+    M = jax.random.normal(key, (n, n), jnp.float64)
+    return 0.5 * (M + M.T)
+
+
+KEY = jax.random.PRNGKey(0)
+K1, K2, K3, K4 = jax.random.split(KEY, 4)
+
+
+# ---------------------------------------------------------------- helpers --
+
+def test_householder_annihilates():
+    x = jax.random.normal(K1, (17,), jnp.float64)
+    v, tau, beta = householder(x)
+    y = x - tau * v * (v @ x)
+    np.testing.assert_allclose(float(y[0]), float(beta), rtol=1e-13)
+    np.testing.assert_allclose(np.asarray(y[1:]), 0.0, atol=1e-13)
+    # norm preserved
+    np.testing.assert_allclose(abs(float(beta)), float(jnp.linalg.norm(x)),
+                               rtol=1e-13)
+
+
+def test_householder_masked_matches_dense():
+    x = jax.random.normal(K2, (23,), jnp.float64)
+    p = 7
+    v, tau, beta = householder_masked(x, jnp.asarray(p))
+    vd, taud, betad = householder(x[p:])
+    np.testing.assert_allclose(np.asarray(v[p:]), np.asarray(vd), rtol=1e-13)
+    np.testing.assert_allclose(float(tau), float(taud), rtol=1e-13)
+    np.testing.assert_allclose(np.asarray(v[:p]), 0.0)
+
+
+@pytest.mark.parametrize("p,w", [(16, 4), (40, 8), (8, 8), (5, 8)])
+def test_qr_wy(p, w):
+    E = jax.random.normal(K3, (p, w), jnp.float64)
+    V, T, R = qr_wy(E)
+    Q = jnp.eye(p) - V @ T @ V.T
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(p), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(Q.T @ E), np.asarray(R), atol=1e-12)
+    # R upper trapezoidal
+    np.testing.assert_allclose(np.tril(np.asarray(R), -1), 0.0, atol=1e-12)
+
+
+# ------------------------------------------------------------------- GS1 --
+
+@pytest.mark.parametrize("n,block", [(65, 16), (128, 32), (50, 64)])
+def test_cholesky_blocked(n, block):
+    B = _rand_spd(n, K1)
+    U = cholesky_blocked(B, block=block)
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.asarray(B), rtol=1e-12,
+                               atol=1e-10)
+    np.testing.assert_allclose(np.tril(np.asarray(U), -1), 0.0)
+    Uref = cholesky_upper(B)
+    np.testing.assert_allclose(np.asarray(U), np.asarray(Uref), rtol=1e-10,
+                               atol=1e-10)
+
+
+# ------------------------------------------------------------------- GS2 --
+
+@pytest.mark.parametrize("n,block", [(48, 16), (96, 32), (70, 33)])
+def test_standard_form_variants_agree(n, block):
+    A = _rand_sym(n, K2)
+    B = _rand_spd(n, K3)
+    U = cholesky_upper(B)
+    C1 = to_standard_two_trsm(A, U)
+    C2 = to_standard_sygst(A, U, block=block)
+    # numpy oracle
+    Uinv = np.linalg.inv(np.asarray(U))
+    Cref = Uinv.T @ np.asarray(A) @ Uinv
+    np.testing.assert_allclose(np.asarray(C1), Cref, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(C2), Cref, atol=1e-10)
+
+
+def test_standard_form_preserves_eigenvalues():
+    n = 64
+    A = _rand_sym(n, K2)
+    B = _rand_spd(n, K3)
+    U = cholesky_upper(B)
+    C = to_standard_two_trsm(A, U)
+    w_c = np.linalg.eigvalsh(np.asarray(C))
+    # generalized eigenvalues via scipy-equivalent numpy route
+    Binv_A = np.linalg.solve(np.asarray(B), np.asarray(A))
+    w_g = np.sort(np.linalg.eigvals(Binv_A).real)
+    np.testing.assert_allclose(w_c, w_g, rtol=1e-8, atol=1e-8)
+
+
+# ------------------------------------------------------------------- TD1 --
+
+@pytest.mark.parametrize("n", [5, 33, 96])
+def test_tridiagonalize(n):
+    C = _rand_sym(n, K4)
+    res = tridiagonalize(C)
+    # same eigenvalues
+    T = np.diag(np.asarray(res.d)) + np.diag(np.asarray(res.e), 1) \
+        + np.diag(np.asarray(res.e), -1)
+    np.testing.assert_allclose(np.linalg.eigvalsh(T),
+                               np.linalg.eigvalsh(np.asarray(C)),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_apply_q_orthogonal_and_consistent():
+    n = 48
+    C = _rand_sym(n, K1)
+    res = tridiagonalize(C)
+    I = jnp.eye(n, dtype=jnp.float64)
+    Q = apply_q(res, I)
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(n), atol=1e-12)
+    # Q^T C Q should be tridiagonal T
+    T = np.asarray(Q.T @ C @ Q)
+    np.testing.assert_allclose(np.diag(T), np.asarray(res.d), atol=1e-10)
+    np.testing.assert_allclose(np.diag(T, -1), np.asarray(res.e), atol=1e-10)
+    off = T - np.diag(np.diag(T)) - np.diag(np.diag(T, 1), 1) \
+        - np.diag(np.diag(T, -1), -1)
+    np.testing.assert_allclose(off, 0.0, atol=1e-10)
+    # qt is the inverse of q
+    Z = jax.random.normal(K2, (n, 7), jnp.float64)
+    np.testing.assert_allclose(np.asarray(apply_qt(res, apply_q(res, Z))),
+                               np.asarray(Z), atol=1e-12)
+
+
+# --------------------------------------------------------------- TT1/TT2 --
+
+@pytest.mark.parametrize("n,w", [(40, 4), (65, 8), (96, 16)])
+def test_reduce_to_band(n, w):
+    C = _rand_sym(n, K3)
+    band = reduce_to_band(C, w=w)
+    # Q1 orthogonal
+    np.testing.assert_allclose(np.asarray(band.Q1.T @ band.Q1), np.eye(n),
+                               atol=1e-12)
+    # W = Q1^T C Q1 and banded
+    Wref = np.asarray(band.Q1.T @ C @ band.Q1)
+    np.testing.assert_allclose(np.asarray(band.W), Wref, atol=1e-9)
+    i, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    assert np.all(np.abs(np.asarray(band.W)[np.abs(i - j) > w]) < 1e-10)
+    # eigenvalues preserved
+    np.testing.assert_allclose(np.linalg.eigvalsh(np.asarray(band.W)),
+                               np.linalg.eigvalsh(np.asarray(C)),
+                               rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("n,w", [(40, 4), (64, 8)])
+def test_band_to_tridiag(n, w):
+    C = _rand_sym(n, K4)
+    band = reduce_to_band(C, w=w)
+    tri = band_to_tridiag(band.W, band.Q1, w)
+    # Q orthogonal
+    np.testing.assert_allclose(np.asarray(tri.Q.T @ tri.Q), np.eye(n),
+                               atol=1e-11)
+    # Q^T C Q = T
+    T = np.diag(np.asarray(tri.d)) + np.diag(np.asarray(tri.e), 1) \
+        + np.diag(np.asarray(tri.e), -1)
+    np.testing.assert_allclose(np.asarray(tri.Q.T @ C @ tri.Q), T, atol=1e-9)
+    np.testing.assert_allclose(np.linalg.eigvalsh(T),
+                               np.linalg.eigvalsh(np.asarray(C)),
+                               rtol=1e-9, atol=1e-9)
+
+
+# ------------------------------------------------------------------- TD2 --
+
+def test_sturm_count_matches_numpy():
+    n = 64
+    d = jax.random.normal(K1, (n,), jnp.float64)
+    e = jax.random.normal(K2, (n - 1,), jnp.float64)
+    T = np.diag(np.asarray(d)) + np.diag(np.asarray(e), 1) \
+        + np.diag(np.asarray(e), -1)
+    w = np.linalg.eigvalsh(T)
+    for x in [-3.0, -1.0, 0.0, 0.5, 2.0, w[10] + 1e-8]:
+        cnt = int(sturm_count(d, e, jnp.asarray(x)))
+        assert cnt == int(np.sum(w < x)), (x, cnt, int(np.sum(w < x)))
+
+
+@pytest.mark.parametrize("n,s,end", [(64, 8, "low"), (64, 8, "high"),
+                                     (128, 13, "low")])
+def test_bisect_eigenvalues(n, s, end):
+    d = jax.random.normal(K3, (n,), jnp.float64)
+    e = jax.random.normal(K4, (n - 1,), jnp.float64)
+    T = np.diag(np.asarray(d)) + np.diag(np.asarray(e), 1) \
+        + np.diag(np.asarray(e), -1)
+    w = np.linalg.eigvalsh(T)
+    ks = jnp.arange(s) if end == "low" else jnp.arange(n - s, n)
+    lam = bisect_eigenvalues(d, e, ks)
+    np.testing.assert_allclose(np.asarray(lam), w[np.asarray(ks)], rtol=1e-12,
+                               atol=1e-12)
+
+
+def test_inverse_iteration_eigenvectors():
+    n, s = 96, 10
+    d = jax.random.normal(K1, (n,), jnp.float64)
+    e = jax.random.normal(K2, (n - 1,), jnp.float64)
+    lam, Z = eigh_tridiag_selected(d, e, jnp.arange(s))
+    T = np.diag(np.asarray(d)) + np.diag(np.asarray(e), 1) \
+        + np.diag(np.asarray(e), -1)
+    R = T @ np.asarray(Z) - np.asarray(Z) * np.asarray(lam)[None, :]
+    assert np.linalg.norm(R) / np.linalg.norm(T) < 1e-12
+    G = np.asarray(Z).T @ np.asarray(Z)
+    np.testing.assert_allclose(G, np.eye(s), atol=1e-10)
+
+
+def test_inverse_iteration_clustered():
+    # nearly-degenerate eigenvalues: the glued-Wilkinson trap
+    n = 40
+    d = jnp.concatenate([jnp.full((n // 2,), 1.0),
+                         jnp.full((n // 2,), 1.0 + 1e-10)])
+    e = jnp.full((n - 1,), 1e-8, jnp.float64).at[n // 2 - 1].set(1e-12)
+    lam, Z = eigh_tridiag_selected(d, e, jnp.arange(6))
+    G = np.asarray(Z.T @ Z)
+    np.testing.assert_allclose(G, np.eye(6), atol=1e-8)
+
+
+# ------------------------------------------------------------------- BT1 --
+
+def test_back_transform_roundtrip():
+    n, s = 32, 4
+    B = _rand_spd(n, K1)
+    U = cholesky_upper(B)
+    Y = jax.random.normal(K2, (n, s), jnp.float64)
+    X = back_transform_generalized(U, Y)
+    np.testing.assert_allclose(np.asarray(U @ X), np.asarray(Y), atol=1e-11)
+
+
+@pytest.mark.parametrize("n,panel", [(64, 8), (96, 32)])
+def test_tridiagonalize_blocked_matches_unblocked(n, panel):
+    from repro.core import tridiagonalize_blocked
+    C = _rand_sym(n, K2)
+    ref = tridiagonalize(C)
+    blk = tridiagonalize_blocked(C, panel=panel)
+    Tb = np.diag(np.asarray(blk.d)) + np.diag(np.asarray(blk.e), 1) \
+        + np.diag(np.asarray(blk.e), -1)
+    np.testing.assert_allclose(np.linalg.eigvalsh(Tb),
+                               np.linalg.eigvalsh(np.asarray(C)),
+                               rtol=1e-10, atol=1e-10)
+    I = jnp.eye(n, dtype=jnp.float64)
+    Q = apply_q(blk, I)
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(n), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(Q.T @ C @ Q), Tb, atol=1e-9)
+
+
+def test_solve_td_blocked_path():
+    from repro.core import solve as solve_fn
+    from repro.data.problems import md_like
+    prob = md_like(72)
+    res = solve_fn(prob.A, prob.B, 5, variant="TD", td1="blocked")
+    np.testing.assert_allclose(np.asarray(res.evals),
+                               np.asarray(prob.exact_evals[:5]),
+                               rtol=1e-8, atol=1e-10)

@@ -1,0 +1,267 @@
+"""Distribution layer: checkpoint round-trip/atomicity, error-feedback
+compression, straggler monitor, elastic remesh plans, partitioning rules."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist import checkpoint as ckpt
+from repro.dist.compression import (compress_with_feedback, decompress,
+                                    init_ef_state)
+from repro.dist.elastic import plan_remesh
+from repro.dist.straggler import StragglerMonitor
+
+
+# ------------------------------------------------------------ checkpoint --
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (4, 8)),
+            "nested": {"b": jax.random.normal(k2, (3,)),
+                       "step": jnp.asarray(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 12, t, extra={"cursor": 34})
+    out = ckpt.load_latest(str(tmp_path), t)
+    assert out is not None
+    step, restored, extra = out
+    assert step == 12 and extra["cursor"] == 34
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                         np.asarray(b)),
+                 t, restored)
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    t = _tree(jax.random.PRNGKey(1))
+    for s in [1, 2, 3, 4, 5]:
+        ckpt.save(str(tmp_path), s, t, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    kept = sorted(os.listdir(tmp_path))
+    assert len([d for d in kept if d.startswith("step_")]) == 3
+
+
+def test_checkpoint_skips_corrupt(tmp_path):
+    t = _tree(jax.random.PRNGKey(2))
+    ckpt.save(str(tmp_path), 1, t)
+    # simulate a crash mid-write: tmp dir without manifest
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    # and a finalized-looking dir without manifest
+    os.makedirs(tmp_path / "step_00000003")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_lanczos_checkpoint_resume(tmp_path):
+    """A preempted eigensolve resumes from the persisted factorization."""
+    from repro.core import ExplicitC, lanczos_solve
+    n, s = 64, 4
+    key = jax.random.PRNGKey(3)
+    lam = jnp.sort(jax.random.normal(key, (n,), jnp.float64)) * 5
+    Q, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (n, n), jnp.float64))
+    C = 0.5 * ((Q * lam[None, :]) @ Q.T + ((Q * lam[None, :]) @ Q.T).T)
+    cb = ckpt.lanczos_callback(str(tmp_path), every=1)
+    res = lanczos_solve(ExplicitC(C), s, which="SA", callback=cb)
+    assert res.converged
+    saved = ckpt.load_latest(str(tmp_path),
+                             {"V": jnp.zeros((n, 21)),
+                              "T": jnp.zeros((21, 21))})
+    assert saved is not None
+    _, fact, extra = saved
+    assert extra["kind"] == "lanczos"
+    assert fact["V"].shape[0] == n
+
+
+# ----------------------------------------------------------- compression --
+
+def test_ef_compression_bounded_error():
+    key = jax.random.PRNGKey(4)
+    g = {"w": jax.random.normal(key, (64, 64), jnp.float32)}
+    ef = init_ef_state(g)
+    q, s, ef = compress_with_feedback(g, ef)
+    deq = decompress(q, s)
+    # int8 quantization error <= scale/2 per element + EF carries the rest
+    err = np.abs(np.asarray(deq["w"]) - np.asarray(g["w"])).max()
+    assert err <= float(s["w"]) * 0.5 + 1e-6
+    assert q["w"].dtype == jnp.int8
+
+
+def test_ef_accumulates_small_signals():
+    """EF telescopes: sum of transmissions = sum of gradients - final error,
+    so even signals far below one quantization step get through eventually."""
+    g = {"w": jnp.full((8, 8), 1e-4, jnp.float32)
+         .at[0, 0].set(1.0)}  # scale ~ 1/127 >> 1e-4
+    ef = init_ef_state(g)
+    total = jnp.zeros((8, 8), jnp.float32)
+    last_scale = 0.0
+    for _ in range(100):
+        q, s, ef = compress_with_feedback(g, ef)
+        total = total + decompress(q, s)["w"]
+        last_scale = float(s["w"])
+    # telescoping: |total - 100 g| = |e_final| <= one quantization step
+    err = float(jnp.abs(total[1, 1] - 100 * 1e-4))
+    assert err <= last_scale, (err, last_scale)
+    # and without EF nothing would ever be transmitted for this element
+    q0, s0 = jnp.round(g["w"][1, 1] / last_scale), last_scale
+    assert float(q0) == 0.0
+
+
+# -------------------------------------------------------------- straggler --
+
+def test_straggler_detection_and_rebalance():
+    mon = StragglerMonitor(n_hosts=8)
+    for step in range(5):
+        for h in range(8):
+            mon.record(h, 1.0 if h != 3 else 2.5)  # host 3 is slow
+    assert mon.stragglers() == [3]
+    plan = mon.rebalance_plan(microbatches_per_host=4)
+    assert sum(plan.values()) == 32
+    assert plan[3] < 4           # slow host sheds load
+    assert max(plan.values()) <= 6
+
+
+def test_straggler_none_when_uniform():
+    mon = StragglerMonitor(n_hosts=4)
+    for _ in range(4):
+        for h in range(4):
+            mon.record(h, 1.0)
+    assert mon.stragglers() == []
+    plan = mon.rebalance_plan(2)
+    assert all(v == 2 for v in plan.values())
+
+
+# ---------------------------------------------------------------- elastic --
+
+def test_plan_remesh_keeps_tp():
+    p = plan_remesh(512, model_parallel=16, pods=2)
+    assert p.new_shape == (2, 16, 16)
+    p2 = plan_remesh(480, model_parallel=16)  # lost 32 chips
+    assert p2.new_shape == (30, 16)
+    p3 = plan_remesh(500, model_parallel=16)  # ragged: drop remainder
+    assert p3.new_shape == (31, 16)
+    assert "dropping" in p3.note
+
+
+def test_plan_remesh_rejects_impossible():
+    with pytest.raises(ValueError):
+        plan_remesh(8, model_parallel=16)
+
+
+# ---------------------------------------------------------- partitioning --
+
+def test_partitioning_rules_shape_aware():
+    """Run in a subprocess with 8 host devices to exercise a real mesh."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, functools
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import smoke_config
+        from repro.dist.partitioning import (param_shardings,
+                                             decode_state_shardings,
+                                             batch_shardings)
+        from repro.models.model import init_params, init_decode_state
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg = smoke_config("qwen2-moe-a2.7b")
+        shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+        sh = param_shardings(mesh, shapes)
+        flat = jax.tree_util.tree_leaves_with_path(sh)
+        specs = {"/".join(str(k) for k in p): s.spec for p, s in flat}
+        # experts sharded over model (EP)
+        ep = [v for k, v in specs.items() if "w_gate" in k]
+        assert any("model" in str(s) for s in ep), ep
+        st = jax.eval_shape(lambda: init_decode_state(cfg, 8, capacity=32))
+        dsh = decode_state_shardings(mesh, st)
+        bsh = batch_shardings(mesh, {
+            "tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)})
+        assert "data" in str(bsh["tokens"].spec)
+        # B=1 batch must NOT get sharded over data
+        bsh1 = batch_shardings(mesh, {
+            "tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)})
+        assert bsh1["tokens"].spec == P(None, None)
+        print("PARTITION_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "PARTITION_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_sharded_la_multidevice():
+    """Distributed symv/gemm/cholesky/trsm on an 8-device subprocess mesh."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.dist.sharded_la import (dist_symv, dist_gemm, dist_gemm_rs,
+                                           dist_cholesky, dist_trsm_left_t)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        n = 64
+        key = jax.random.PRNGKey(0)
+        M = jax.random.normal(key, (n, n), jnp.float64)
+        A = 0.5 * (M + M.T)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float64)
+        y = dist_symv(mesh, A, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(A @ x),
+                                   rtol=1e-12)
+        Bm = jax.random.normal(jax.random.fold_in(key, 2), (n, 16),
+                               jnp.float64)
+        np.testing.assert_allclose(np.asarray(dist_gemm(mesh, A, Bm)),
+                                   np.asarray(A @ Bm), rtol=1e-11, atol=1e-11)
+        np.testing.assert_allclose(np.asarray(dist_gemm_rs(mesh, A, Bm)),
+                                   np.asarray(A @ Bm), rtol=1e-11, atol=1e-11)
+        SPD = A @ A.T + n * jnp.eye(n)
+        U = dist_cholesky(mesh, SPD)
+        np.testing.assert_allclose(np.asarray(U.T @ U), np.asarray(SPD),
+                                   rtol=1e-10, atol=1e-8)
+        W = dist_trsm_left_t(mesh, U, Bm)
+        np.testing.assert_allclose(np.asarray(U.T @ W), np.asarray(Bm),
+                                   rtol=1e-10, atol=1e-8)
+        print("SHARDED_LA_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "SHARDED_LA_OK" in out.stdout, out.stdout + out.stderr[-3000:]
+
+
+def test_distributed_ke_pipeline_end_to_end():
+    """The full distributed KE solve matches the exact spectrum (8 devices)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.data.problems import md_like
+        from repro.dist.eigensolver import solve_ke_distributed
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        prob = md_like(64)
+        evals, X = solve_ke_distributed(mesh, prob.A, prob.B, s=4, m=24,
+                                        max_restarts=300)
+        np.testing.assert_allclose(np.asarray(evals),
+                                   np.asarray(prob.exact_evals[:4]),
+                                   rtol=1e-8, atol=1e-10)
+        # residual of the generalized problem
+        R = np.asarray(prob.A @ X - (prob.B @ X) * np.asarray(evals)[None, :])
+        rel = np.linalg.norm(R) / np.linalg.norm(np.asarray(prob.A))
+        assert rel < 1e-8, rel
+        print("DIST_KE_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "DIST_KE_OK" in out.stdout, out.stdout + out.stderr[-3000:]

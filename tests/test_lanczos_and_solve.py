@@ -1,0 +1,138 @@
+"""Lanczos (KE/KI) correctness + end-to-end GSYEIG solve for all 4 variants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ExplicitC,
+    ImplicitC,
+    accuracy_report,
+    cholesky_upper,
+    lanczos_solve,
+    lanczos_solve_jit,
+    solve,
+    to_standard_two_trsm,
+)
+from repro.data.problems import dft_like, md_like
+
+KEY = jax.random.PRNGKey(42)
+K1, K2, K3 = jax.random.split(KEY, 3)
+
+
+def _sym_with_known_spectrum(n, key):
+    lam = jnp.sort(jax.random.normal(key, (n,), jnp.float64)) * 10.0
+    M = jax.random.normal(jax.random.fold_in(key, 1), (n, n), jnp.float64)
+    Q, _ = jnp.linalg.qr(M)
+    C = (Q * lam[None, :]) @ Q.T
+    return 0.5 * (C + C.T), lam
+
+
+@pytest.mark.parametrize("which", ["SA", "LA"])
+def test_lanczos_explicit(which):
+    n, s = 128, 6
+    C, lam = _sym_with_known_spectrum(n, K1)
+    res = lanczos_solve(ExplicitC(C), s, which=which)
+    assert res.converged
+    want = np.asarray(lam[:s]) if which == "SA" else np.asarray(lam[-s:][::-1])
+    np.testing.assert_allclose(np.asarray(res.evals), want, rtol=1e-10,
+                               atol=1e-10)
+    # Ritz vectors: residual check
+    V = np.asarray(res.evecs)
+    R = np.asarray(C) @ V - V * np.asarray(res.evals)[None, :]
+    assert np.linalg.norm(R) / np.linalg.norm(np.asarray(C)) < 1e-10
+    np.testing.assert_allclose(V.T @ V, np.eye(s), atol=1e-10)
+
+
+def test_lanczos_implicit_matches_explicit():
+    # paper's MD setup: both A and B SPD -> solve the INVERSE pair (B, A) for
+    # its largest eigenpairs (fast convergence), exactly like the paper.
+    n, s = 96, 5
+    prob = md_like(n)
+    U = cholesky_upper(prob.A)  # inverse pair: roles swapped
+    C = to_standard_two_trsm(prob.B, U)
+    r_e = lanczos_solve(ExplicitC(C), s, which="LA")
+    r_i = lanczos_solve(ImplicitC(prob.B, U), s, which="LA")
+    assert r_e.converged and r_i.converged
+    np.testing.assert_allclose(np.asarray(r_e.evals), np.asarray(r_i.evals),
+                               rtol=1e-9, atol=1e-9)
+    lam = np.sort(1.0 / np.asarray(r_e.evals))
+    np.testing.assert_allclose(lam, np.asarray(prob.exact_evals[:s]),
+                               rtol=1e-8, atol=1e-9)
+
+
+def test_lanczos_jit_driver_matches_host():
+    n, s = 96, 4
+    C, lam = _sym_with_known_spectrum(n, K2)
+    v0 = jax.random.normal(K3, (n,), jnp.float64)
+    m = 24
+    evals, evecs, k, conv = lanczos_solve_jit(ExplicitC(C), v0, s, m,
+                                              which="SA", max_restarts=200)
+    assert bool(conv)
+    np.testing.assert_allclose(np.asarray(evals), np.asarray(lam[:s]),
+                               rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("variant", ["TD", "TT", "KE", "KI"])
+def test_solve_md_like(variant):
+    n, s = 80, 6
+    prob = md_like(n)
+    # Krylov variants use the paper's inverse-problem trick (valid: A SPD)
+    invert = variant in ("KE", "KI")
+    res = solve(prob.A, prob.B, s, variant=variant, which="smallest",
+                band_width=8, invert=invert)
+    np.testing.assert_allclose(np.asarray(res.evals),
+                               np.asarray(prob.exact_evals[:s]),
+                               rtol=1e-7, atol=1e-9)
+    acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
+    assert float(acc.b_orthogonality) < 1e-10
+    assert float(acc.relative_residual) < 1e-10
+    assert res.stage_times["Tot."] > 0
+    assert "GS1" in res.stage_times
+    if variant == "KI":
+        assert "GS2" not in res.stage_times  # KI never builds C
+    else:
+        assert "GS2" in res.stage_times
+
+
+@pytest.mark.parametrize("variant", ["TD", "KE"])
+def test_solve_dft_like(variant):
+    n, s = 100, 10
+    prob = dft_like(n)
+    res = solve(prob.A, prob.B, s, variant=variant, which="smallest")
+    np.testing.assert_allclose(np.asarray(res.evals),
+                               np.asarray(prob.exact_evals[:s]),
+                               rtol=1e-6, atol=1e-8)
+    acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
+    assert float(acc.b_orthogonality) < 1e-9
+    assert float(acc.relative_residual) < 1e-9
+
+
+def test_solve_inverse_trick():
+    """Paper's MD acceleration: largest of (B, A) == smallest of (A, B)."""
+    n, s = 64, 5
+    prob = md_like(n)
+    res_direct = solve(prob.A, prob.B, s, variant="KE", which="smallest")
+    res_inv = solve(prob.A, prob.B, s, variant="KE", which="smallest",
+                    invert=True)
+    np.testing.assert_allclose(np.asarray(res_inv.evals),
+                               np.asarray(res_direct.evals), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(res_inv.evals),
+                               np.asarray(prob.exact_evals[:s]), rtol=1e-7)
+
+
+def test_solve_largest_end():
+    n, s = 64, 4
+    prob = md_like(n)
+    res = solve(prob.A, prob.B, s, variant="TD", which="largest")
+    np.testing.assert_allclose(np.asarray(res.evals),
+                               np.asarray(prob.exact_evals[-s:]), rtol=1e-8)
+
+
+def test_gs2_sygst_pipeline():
+    n, s = 72, 5
+    prob = md_like(n)
+    res = solve(prob.A, prob.B, s, variant="TD", gs2="sygst", block=24)
+    np.testing.assert_allclose(np.asarray(res.evals),
+                               np.asarray(prob.exact_evals[:s]), rtol=1e-7,
+                               atol=1e-9)

@@ -1,0 +1,69 @@
+"""Cross-check the analytic cost model against XLA cost_analysis on small
+UNROLLED configs (no scan => XLA counts every op exactly once)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.analytic import fwd_flops
+from repro.configs import smoke_config
+from repro.models.model import forward, init_params
+
+
+def _hlo_flops(cfg, B, S):
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    toks = jnp.zeros((B, S), jnp.int32)
+
+    def f(params, toks):
+        logits, _ = forward(params, toks, cfg, remat=False, unroll=True)
+        return logits
+
+    compiled = jax.jit(f).lower(params, toks).compile()
+    ca = compiled.cost_analysis() or {}
+    return float(ca.get("flops", 0.0))
+
+
+@pytest.mark.parametrize("arch", ["mistral-large-123b", "qwen1.5-32b"])
+def test_analytic_flops_match_hlo_dense(arch):
+    cfg = smoke_config(arch).scaled(dtype="float32")
+    B, S = 2, 128
+    hlo = _hlo_flops(cfg, B, S)
+    # sequence scans don't exist in dense attention configs at S=128 (no
+    # chunking), so the comparison is exact-ish; allow fusion slack.
+    ana = fwd_flops(cfg, B, S)
+    assert hlo > 0
+    ratio = ana / hlo
+    assert 0.5 < ratio < 2.0, (ana, hlo, ratio)
+
+
+def test_analytic_flops_scale_with_seq():
+    cfg = smoke_config("chameleon-34b")
+    f1 = fwd_flops(cfg, 2, 256)
+    f2 = fwd_flops(cfg, 2, 512)
+    # attention is quadratic but projections linear: 2x seq => 2-4x flops
+    assert 2.0 <= f2 / f1 <= 4.0
+
+
+def test_decode_flops_much_smaller_than_prefill():
+    from repro.analysis.analytic import cell_cost
+    from repro.configs import get_config
+    from repro.models.config import shape_by_name
+    cfg = get_config("mistral-large-123b")
+    dec = cell_cost(cfg, shape_by_name("decode_32k"), 256)
+    pre = cell_cost(cfg, shape_by_name("prefill_32k"), 256)
+    assert dec.flops < pre.flops / 1000.0
+    # decode is never compute-bound
+    assert dec.hbm_bytes / 819e9 > dec.flops / 197e12
+
+
+def test_moe_active_vs_total_flops():
+    from repro.analysis.analytic import fwd_flops
+    from repro.configs import get_config
+    cfg = get_config("arctic-480b")
+    n_total = cfg.param_count()
+    n_active = cfg.param_count(active_only=True)
+    assert n_active < 0.2 * n_total  # 2-of-128 routing
+    f = fwd_flops(cfg, 1, 1024)
+    # flops track ACTIVE params (2*N_active*D), within attention/embed slack
+    assert f < 2 * 2 * n_active * 1024 * 1.5
