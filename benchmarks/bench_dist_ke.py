@@ -1,0 +1,100 @@
+"""Distributed-KE benchmark: single device vs an 8-host-device mesh.
+
+Runs ``repro.dist.eigensolver.solve_ke_distributed`` on the MD-like
+problem twice — on a degenerate (1, 1) mesh and on the (4, 2)
+data x model mesh over 8 forced host-platform devices — and records
+wall-clock per stage plus Lanczos matvec counts. On a CPU host the
+8-way run measures partitioning *overhead* (no real parallel FLOPs);
+the point of the table is collective/bookkeeping cost and the invariant
+that the distributed solver does the same number of matvecs and returns
+the same spectrum.
+
+Standalone (sets its own XLA flags, so run it directly, not via run.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_dist_ke [--n 128 --s 4]
+
+Emits ``artifacts/BENCH_dist_ke.json`` next to the other benchmark tables
+and prints the usual ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+
+import jax       # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+
+def bench_mesh(mesh_shape, n: int, s: int, m: int, repeats: int) -> dict:
+    from repro.data.problems import md_like
+    from repro.dist.eigensolver import solve_ke_distributed
+
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    prob = md_like(n)
+    label = "x".join(str(d) for d in mesh_shape)
+
+    # warmup compiles every stage; timed repeats measure steady state
+    evals, X, info = solve_ke_distributed(mesh, prob.A, prob.B, s, m=m,
+                                          max_restarts=300,
+                                          return_info=True)
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        evals, X, info = solve_ke_distributed(mesh, prob.A, prob.B, s, m=m,
+                                              max_restarts=300,
+                                              return_info=True)
+        walls.append(time.perf_counter() - t0)
+    err = float(np.max(np.abs(np.asarray(evals)
+                              - np.asarray(prob.exact_evals[:s]))))
+    return {
+        "mesh": label,
+        "n_devices": int(np.prod(mesh_shape)),
+        "n": n, "s": s, "m": m,
+        "wall_s_median": sorted(walls)[len(walls) // 2],
+        "wall_s_all": walls,
+        "stage_times_s": {k: round(v, 5)
+                          for k, v in info["stage_times"].items()},
+        "n_matvec": info["n_matvec"],
+        "n_restart": info["n_restart"],
+        "converged": info["converged"],
+        "max_abs_eval_error": err,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--s", type=int, default=4)
+    ap.add_argument("--m", type=int, default=24)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--outdir", default="artifacts")
+    args = ap.parse_args()
+
+    recs = [bench_mesh((1, 1), args.n, args.s, args.m, args.repeats),
+            bench_mesh((4, 2), args.n, args.s, args.m, args.repeats)]
+
+    print("name,us_per_call,derived")
+    for r in recs:
+        print(f"bench_dist_ke_{r['mesh']},{r['wall_s_median'] * 1e6:.1f},"
+              f"n_matvec={r['n_matvec']};n_restart={r['n_restart']};"
+              f"eval_err={r['max_abs_eval_error']:.3e}")
+
+    os.makedirs(args.outdir, exist_ok=True)
+    out = os.path.join(args.outdir, "BENCH_dist_ke.json")
+    with open(out, "w") as f:
+        json.dump(recs, f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,17 @@ HBM_BW = 819e9                  # B/s
 ICI_LINK_BW = 50e9              # B/s per link (conservative single-link)
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``.
+
+    jax has returned a dict, a list of one dict per computation, or None
+    across versions; every consumer here wants a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 @dataclasses.dataclass
 class RooflineCell:
     arch: str

@@ -21,7 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .operators import Operator, apply_op, op_dim
+from .operators import ExplicitC, ImplicitC, Operator, apply_op, op_dim
 
 
 class LanczosResult(NamedTuple):
@@ -37,13 +37,15 @@ class LanczosResult(NamedTuple):
 # single Lanczos step (jitted, dynamic step index j into static-size buffers)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("use_kernel",), donate_argnums=(1, 2))
-def _lanczos_step(op: Operator, V: jax.Array, T: jax.Array, j: jax.Array,
-                  use_kernel: bool = False):
-    """Extend the factorization by one column: V (n, m+1), T ((m+1, m+1))."""
+def _step_impl(matvec, V: jax.Array, T: jax.Array, j: jax.Array):
+    """Extend the factorization by one column: V (n, m+1), T ((m+1, m+1)).
+
+    ``matvec`` is any traceable y = C w closure — ``apply_op`` on the local
+    Operator pytrees, or a ``dist_symv`` over a device mesh (see
+    ``repro.dist.eigensolver``)."""
     n, mp1 = V.shape
     v_j = V[:, j]
-    w = apply_op(op, v_j, use_kernel=use_kernel)
+    w = matvec(v_j)
     cols = jnp.arange(mp1)
     mask = (cols <= j).astype(V.dtype)
     # two-pass full re-orthogonalization (Kahan twice-is-enough)
@@ -60,6 +62,31 @@ def _lanczos_step(op: Operator, V: jax.Array, T: jax.Array, j: jax.Array,
     v_next = w / jnp.maximum(beta, jnp.finfo(V.dtype).tiny)
     V = V.at[:, j + 1].set(v_next)
     return V, T, beta
+
+
+@partial(jax.jit, static_argnames=("use_kernel",), donate_argnums=(1, 2))
+def _lanczos_step(op: Operator, V: jax.Array, T: jax.Array, j: jax.Array,
+                  use_kernel: bool = False):
+    """Operator-pytree step: op rides along as a traced argument so one
+    compilation serves every problem of the same shape."""
+    return _step_impl(lambda v: apply_op(op, v, use_kernel=use_kernel),
+                      V, T, j)
+
+
+def _make_step(op, use_kernel: bool):
+    """Step driver for either op flavor.
+
+    Operator pytrees reuse the module-level jitted step (compile cache
+    shared across solves); bare matvec callables — the distributed path —
+    get a per-solve jit of the closure (the closure is stable across the
+    restart loop, so each solve compiles the step once)."""
+    if isinstance(op, (ExplicitC, ImplicitC)):
+        return lambda V, T, j: _lanczos_step(op, V, T, j,
+                                             use_kernel=use_kernel)
+    if callable(op):
+        jit_step = jax.jit(partial(_step_impl, op), donate_argnums=(0, 1))
+        return lambda V, T, j: jit_step(V, T, j)
+    raise TypeError(f"op must be an Operator or a matvec callable: {op!r}")
 
 
 @partial(jax.jit, static_argnames=("s", "keep", "m", "which"))
@@ -88,23 +115,34 @@ def default_subspace(s: int, n: int) -> int:
     return int(min(max(2 * s + 1, 20), n - 1))
 
 
-def lanczos_solve(op: Operator, s: int, which: str = "SA", m: int | None = None,
+def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
                   tol: float = 0.0, max_restarts: int = 500,
                   key: jax.Array | None = None, use_kernel: bool = False,
                   v0: jax.Array | None = None,
-                  callback=None) -> LanczosResult:
+                  callback=None, n: int | None = None) -> LanczosResult:
     """Host-driven thick-restart Lanczos for s extremal eigenpairs of `op`.
 
+    `op` is an Operator pytree (ExplicitC/ImplicitC) or any matvec callable
+    w -> C w — the distributed path passes a ``dist_symv`` closure. For
+    callables, the problem dimension comes from `v0` (or the explicit `n`).
     which: 'SA' (smallest algebraic) or 'LA' (largest algebraic).
     tol=0.0 reproduces ARPACK's default (machine precision criterion).
     `callback(k_restart, V, T, j)` enables checkpoint hooks (see dist/).
     """
-    n = op_dim(op)
+    if isinstance(op, (ExplicitC, ImplicitC)):
+        n = op_dim(op)
+        dtype = (op.C if isinstance(op, ExplicitC) else op.A).dtype
+    else:
+        if n is None:
+            if v0 is None:
+                raise ValueError("callable op needs `v0` or `n`")
+            n = v0.shape[0]
+        dtype = v0.dtype if v0 is not None else jnp.float64
     if m is None:
         m = default_subspace(s, n)
     assert 2 * s < m + 1 <= n + 1, (s, m, n)
     keep = min(s + max((m - s) // 2, 1), m - 2)
-    dtype = (op.C if hasattr(op, "C") else op.A).dtype
+    step = _make_step(op, use_kernel)
     eps = float(jnp.finfo(dtype).eps)
     tol_eff = tol if tol > 0.0 else eps
 
@@ -122,8 +160,7 @@ def lanczos_solve(op: Operator, s: int, which: str = "SA", m: int | None = None,
     for k_restart in range(max_restarts):
         beta = None
         for j in range(j0, m):
-            V, T, beta = _lanczos_step(op, V, T, jnp.asarray(j),
-                                       use_kernel=use_kernel)
+            V, T, beta = step(V, T, jnp.asarray(j))
             n_matvec += 1
         theta, S, resid, V_new_cols, v_res, T_new = _restart_math(
             V, T, beta, s, keep, m, which

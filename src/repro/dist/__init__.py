@@ -1,0 +1,31 @@
+"""repro.dist — the distribution layer.
+
+Scales the paper's GSYEIG pipeline (and the LM substrate around it) from one
+device to a 2-D ``(data..., model)`` mesh, following the multi-device
+decomposition of the ELPA2 GPU eigensolver (Yu et al. 2020) and the hybrid
+Hermitian solver of Solca & Schulthess (2012): distribute the BLAS-2/3
+building blocks, keep the small projected problem replicated.
+
+Modules
+-------
+checkpoint    atomic manifest-based save / load_latest / retention, plus a
+              Lanczos-factorization callback for preemptible eigensolves
+compression   error-feedback int8 gradient compression (1-bit-Adam family)
+straggler     per-step timing monitor + microbatch rebalance plans
+elastic       ``plan_remesh`` — recompute the mesh after device churn
+partitioning  PartitionSpec rules for params / optimizer / decode state /
+              batches (expert-parallel MoE, B=1 no-shard guard)
+sharded_la    ``dist_symv`` / ``dist_gemm`` / ``dist_cholesky`` /
+              ``dist_trsm_left_t`` — the paper's stage kernels over a 2-D
+              ``shard_map`` mesh
+eigensolver   ``solve_ke_distributed`` — the full KE pipeline where every
+              matvec is a ``dist_symv``
+"""
+from . import (checkpoint, compression, elastic, partitioning, sharded_la,
+               straggler)
+from .eigensolver import solve_ke_distributed
+
+__all__ = [
+    "checkpoint", "compression", "elastic", "partitioning", "sharded_la",
+    "straggler", "solve_ke_distributed",
+]

@@ -1,0 +1,139 @@
+"""Atomic, manifest-based checkpointing for arbitrary pytrees.
+
+Layout: one directory per step, ``<dir>/step_<8-digit>/`` containing
+``leaf_00000.npy ...`` (flattened-pytree order) plus ``manifest.json``
+(leaf paths, step, user ``extra``). Writes go to ``step_*.tmp`` and are
+renamed into place only after the manifest lands, so a crash mid-write can
+never produce a directory that ``load_latest`` would trust: directories
+without a manifest (or still carrying the ``.tmp`` suffix) are skipped.
+
+Also provides ``lanczos_callback`` — a hook for ``core.lanczos.lanczos_solve``
+that persists the thick-restart factorization (V, T) every ``every``
+restarts, so a preempted eigensolve can resume from the latest basis
+instead of from scratch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_MANIFEST = "manifest.json"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None,
+         keep: Optional[int] = None) -> str:
+    """Atomically persist ``tree`` (any pytree of arrays) at ``step``.
+
+    ``extra`` is a small JSON-serializable dict stored in the manifest
+    (data cursors, solver kind, ...). ``keep`` bounds retention: after a
+    successful save only the newest ``keep`` step directories survive.
+    Returns the finalized step directory.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = _step_dir(directory, step)
+    tmp = final + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_leaves_with_path(tree)]
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), np.asarray(leaf),
+                allow_pickle=False)
+    manifest = {"step": int(step), "n_leaves": len(leaves),
+                "leaf_paths": paths, "extra": extra or {}}
+    # manifest last: its presence is the commit marker
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    shutil.rmtree(final, ignore_errors=True)
+    os.rename(tmp, final)
+
+    if keep is not None:
+        steps = _valid_steps(directory)
+        for old in steps[:-keep]:
+            shutil.rmtree(_step_dir(directory, old), ignore_errors=True)
+    return final
+
+
+def _valid_steps(directory: str) -> list[int]:
+    """Ascending step numbers of committed (manifest-bearing) directories."""
+    out = []
+    try:
+        entries = os.listdir(directory)
+    except FileNotFoundError:
+        return out
+    for name in entries:
+        m = _STEP_RE.match(name)
+        if not m:
+            continue  # .tmp leftovers and foreign files
+        if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest committed step, or None when nothing valid exists."""
+    steps = _valid_steps(directory)
+    return steps[-1] if steps else None
+
+
+def load(directory: str, step: int,
+         like: Any) -> Tuple[int, Any, dict]:
+    """Restore the pytree saved at ``step`` into the structure of ``like``."""
+    d = _step_dir(directory, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    n = manifest["n_leaves"]
+    if n != len(like_leaves):
+        raise ValueError(
+            f"checkpoint at step {step} has {n} leaves; template has "
+            f"{len(like_leaves)}")
+    leaves = []
+    for i, ref in enumerate(like_leaves):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"),
+                      allow_pickle=False)
+        dtype = getattr(ref, "dtype", None)
+        leaves.append(jnp.asarray(arr, dtype=dtype))
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, leaves), \
+        manifest["extra"]
+
+
+def load_latest(directory: str,
+                like: Any) -> Optional[Tuple[int, Any, dict]]:
+    """(step, tree, extra) for the newest committed checkpoint, else None."""
+    step = latest_step(directory)
+    if step is None:
+        return None
+    return load(directory, step, like)
+
+
+def lanczos_callback(directory: str, every: int = 1, keep: int = 2):
+    """Checkpoint hook for ``lanczos_solve(..., callback=...)``.
+
+    Persists the thick-restart factorization ``{"V": V, "T": T}`` every
+    ``every`` restarts (step number = restart index) with
+    ``extra={"kind": "lanczos", "j": j}``; resume by loading the latest
+    basis and handing it back as ``v0`` / warm restart state.
+    """
+
+    def callback(k_restart: int, V, T, j) -> None:
+        if k_restart % every:
+            return
+        save(directory, k_restart, {"V": V, "T": T},
+             extra={"kind": "lanczos", "j": int(j)}, keep=keep)
+
+    return callback

@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression (EF-SGD / 1-bit-Adam family).
+
+Per leaf: carry ``c = g + e`` (gradient plus accumulated quantization
+error), quantize to int8 with a per-leaf absmax scale, and fold the
+residual back into the error state. The telescoping identity
+
+    sum_t decompress(q_t) = sum_t g_t - e_final
+
+means signals far below one quantization step still get transmitted
+eventually — the property ``tests/test_dist.py`` checks. Scales are scalar
+per leaf, so the wire format is ``int8 tree + one f32 per leaf``
+(~4x smaller than f32 gradients before entropy coding).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def init_ef_state(grads: Any) -> Any:
+    """Zero error-feedback accumulator shaped like the gradient pytree."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_feedback(grads: Any, ef: Any) -> Tuple[Any, Any, Any]:
+    """(int8 tree, per-leaf scale tree, new error state).
+
+    Quantization error per element is at most ``scale / 2``; everything
+    the wire loses lands in the returned error state and rides along on
+    the next call.
+    """
+
+    def one(g, e):
+        c = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(c)) / _QMAX,
+                            jnp.finfo(jnp.float32).tiny)
+        q = jnp.clip(jnp.round(c / scale), -_QMAX, _QMAX).astype(jnp.int8)
+        new_e = c - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    out = jax.tree.map(one, grads, ef)
+    q = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, new_ef
+
+
+def decompress(q: Any, scales: Any) -> Any:
+    """Dequantize an int8 tree back to f32."""
+    return jax.tree.map(lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales)

@@ -1,0 +1,63 @@
+"""Per-host step-time monitoring and microbatch rebalancing.
+
+``StragglerMonitor`` keeps a sliding window of per-host step durations.
+A host is a straggler when its windowed mean exceeds ``threshold`` times
+the across-host median (robust to one slow host skewing the baseline).
+``rebalance_plan`` converts observed speeds (1 / mean step time) into an
+integer microbatch allocation with the same total work, via
+largest-remainder rounding — slow hosts shed load, fast hosts absorb it.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, window: int = 64,
+                 threshold: float = 1.5):
+        assert n_hosts >= 1
+        self.n_hosts = n_hosts
+        self.threshold = threshold
+        self._times = [deque(maxlen=window) for _ in range(n_hosts)]
+
+    def record(self, host: int, seconds: float) -> None:
+        self._times[host].append(float(seconds))
+
+    def _means(self) -> List[float]:
+        """Per-host windowed mean; hosts with no samples inherit the median
+        of observed hosts (they cannot be classified either way)."""
+        raw = [sum(t) / len(t) if t else None for t in self._times]
+        seen = sorted(m for m in raw if m is not None)
+        fallback = seen[len(seen) // 2] if seen else 1.0
+        return [fallback if m is None else m for m in raw]
+
+    def _median_mean(self) -> float:
+        means = sorted(self._means())
+        return means[len(means) // 2]
+
+    def stragglers(self) -> List[int]:
+        """Hosts whose mean step time exceeds threshold x median."""
+        med = self._median_mean()
+        return [h for h, m in enumerate(self._means())
+                if m > self.threshold * med]
+
+    def rebalance_plan(self, microbatches_per_host: int) -> Dict[int, int]:
+        """host -> microbatch count, preserving the global total.
+
+        Shares are proportional to measured speed (1 / mean step time);
+        largest-remainder rounding keeps the plan integral and exact.
+        """
+        total = self.n_hosts * microbatches_per_host
+        means = self._means()
+        speeds = [1.0 / max(m, 1e-9) for m in means]
+        ssum = sum(speeds)
+        raw = [total * sp / ssum for sp in speeds]
+        plan = {h: int(r) for h, r in enumerate(raw)}
+        short = total - sum(plan.values())
+        # deterministic: biggest fractional remainder first, host id breaks ties
+        order = sorted(range(self.n_hosts),
+                       key=lambda h: (-(raw[h] - plan[h]), h))
+        for h in order[:short]:
+            plan[h] += 1
+        return plan

@@ -35,6 +35,14 @@ prefill_32k lowers the full-sequence prefill; decode_32k / long_500k lower
 serve_step (ONE new token against a seq_len KV cache).
 """
 
+try:                                  # jax >= 0.5 ambient-mesh API
+    _set_mesh = jax.set_mesh
+except AttributeError:                # 0.4.x: specs carry NamedShardings,
+    import contextlib                 # no ambient mesh needed for .lower()
+
+    def _set_mesh(_mesh):
+        return contextlib.nullcontext()
+
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
                 "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8}
 
@@ -82,14 +90,14 @@ def lower_cell(mesh, arch: str, shape_name: str,
     if shape.kind == "train":
         state_specs, batch_specs = train_specs(mesh, cfg, shape)
         step = make_train_step(cfg, OptimizerConfig())
-        with jax.set_mesh(mesh):
+        with _set_mesh(mesh):
             lowered = jax.jit(step).lower(state_specs, batch_specs)
         return lowered, "train_step"
     if shape.kind == "prefill":
         param_specs, batch_specs = prefill_specs(mesh, cfg, shape)
         from repro.train.train_step import make_prefill
         pf = make_prefill(cfg)
-        with jax.set_mesh(mesh):
+        with _set_mesh(mesh):
             if cfg.encoder_decoder:
                 lowered = jax.jit(pf).lower(param_specs,
                                             batch_specs["tokens"],
@@ -102,7 +110,7 @@ def lower_cell(mesh, arch: str, shape_name: str,
     param_specs, token_specs, state_specs = serve_specs(
         mesh, cfg, shape, fsdp_params=(serve_sharding == "fsdp"))
     serve = make_serve_step(cfg)
-    with jax.set_mesh(mesh):
+    with _set_mesh(mesh):
         lowered = jax.jit(serve).lower(param_specs, token_specs, state_specs)
     return lowered, "serve_step"
 
@@ -128,7 +136,8 @@ def run_cell(mesh, mesh_name: str, arch: str, shape_name: str,
             rec["t_compile_s"] = round(time.time() - t1, 2)
             # collectives exist only AFTER SPMD partitioning -> compiled HLO
             rec["collectives"] = parse_collective_bytes(compiled.as_text())
-            ca = compiled.cost_analysis() or {}
+            from repro.analysis.roofline import cost_analysis_dict
+            ca = cost_analysis_dict(compiled)
             rec["cost_analysis"] = {
                 "flops": float(ca.get("flops", -1.0)),
                 "bytes_accessed": float(ca.get("bytes accessed", -1.0)),

@@ -15,7 +15,8 @@ from repro.core.operators import ExplicitC                      # noqa: E402
 from repro.dist.sharded_la import (dist_cholesky, dist_gemm,  # noqa: E402
                                    dist_gemm_rs, dist_symv, dist_symv_rs,
                                    dist_trsm_left_t)
-from repro.launch.dryrun import parse_collective_bytes        # noqa: E402
+from repro.launch.dryrun import (_set_mesh,                   # noqa: E402
+                                 parse_collective_bytes)
 from repro.launch.mesh import make_production_mesh            # noqa: E402
 
 """Eigensolver-side multi-pod dry-run: lowers the PAPER's pipelines on the
@@ -78,10 +79,11 @@ def run(mesh, mesh_name: str, n: int, s: int, outdir: str,
         rec = {"stage": name, "mesh": mesh_name, "n": n, "s": s,
                "status": "ok"}
         try:
-            with jax.set_mesh(mesh):
+            with _set_mesh(mesh):
                 lowered = jax.jit(fn).lower(*specs)
             compiled = lowered.compile()
-            ca = compiled.cost_analysis() or {}
+            from repro.analysis.roofline import cost_analysis_dict
+            ca = cost_analysis_dict(compiled)
             rec["cost_analysis"] = {
                 "flops": float(ca.get("flops", -1.0)),
                 "bytes_accessed": float(ca.get("bytes accessed", -1.0)),

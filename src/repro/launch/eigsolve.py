@@ -2,13 +2,42 @@
 
     PYTHONPATH=src python -m repro.launch.eigsolve \
         --problem md --n 512 --s 8 --variant KE --invert
+
+Distributed execution (KE only): ``--mesh DxM`` lays a (data=D, model=M)
+mesh over the visible devices and routes the solve through
+``repro.dist`` (core.solve's ``mesh=`` dispatch); ``--devices N`` forces N
+host-platform devices for CPU testing, e.g.
+
+    PYTHONPATH=src python -m repro.launch.eigsolve \
+        --problem md --n 64 --s 4 --variant KE --devices 8 --mesh 4x2
 """
 from __future__ import annotations
 
-import argparse
-import json
+import os
+import sys
 
-import jax
+
+def _early_device_count() -> int | None:
+    """--devices must take effect before jax is imported (XLA_FLAGS)."""
+    argv = sys.argv
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return None
+
+
+_n_dev = _early_device_count()
+if _n_dev:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n_dev}").strip()
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+import jax       # noqa: E402
 
 jax.config.update("jax_enable_x64", True)
 
@@ -17,6 +46,16 @@ import numpy as np  # noqa: E402
 from repro.core import solve                      # noqa: E402
 from repro.core.residuals import accuracy_report  # noqa: E402
 from repro.data.problems import dft_like, md_like  # noqa: E402
+
+
+def _parse_mesh(spec: str | None):
+    """'4x2' -> Mesh((4, 2), ('data', 'model')); None -> single device."""
+    if not spec:
+        return None
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    if len(dims) != 2:
+        raise SystemExit(f"--mesh wants DATAxMODEL, e.g. 4x2; got {spec!r}")
+    return jax.make_mesh(dims, ("data", "model"))
 
 
 def main() -> None:
@@ -36,20 +75,32 @@ def main() -> None:
     ap.add_argument("--band-width", type=int, default=8)
     ap.add_argument("--m", type=int, default=None)
     ap.add_argument("--max-restarts", type=int, default=300)
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL mesh (e.g. 4x2): run the KE variant "
+                         "through the repro.dist distributed pipeline")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host-platform devices (set before the "
+                         "jax import; pairs with --mesh on CPU)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+
+    mesh = _parse_mesh(args.mesh)
+    if mesh is not None and args.variant != "KE":
+        raise SystemExit("--mesh is only implemented for --variant KE")
 
     prob = (md_like if args.problem == "md" else dft_like)(args.n)
     res = solve(prob.A, prob.B, args.s, variant=args.variant,
                 which=args.which, invert=args.invert, gs2=args.gs2,
                 td1=args.td1, band_width=args.band_width, m=args.m,
-                max_restarts=args.max_restarts)
+                max_restarts=args.max_restarts, mesh=mesh)
     acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
     err = float(np.max(np.abs(np.asarray(res.evals)
                               - np.asarray(prob.exact_evals[:args.s]))))
     payload = {
         "variant": args.variant,
         "n": args.n, "s": args.s,
+        "mesh": args.mesh or "single",
+        "n_devices": jax.device_count(),
         "evals": [float(x) for x in res.evals],
         "stage_times_s": {k: round(v, 4) for k, v in res.stage_times.items()},
         "b_orthogonality": float(acc.b_orthogonality),

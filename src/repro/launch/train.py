@@ -109,6 +109,10 @@ def main() -> None:
     first, last = np.mean(losses[:10]), np.mean(losses[-10:])
     print(f"loss first10={first:.4f} last10={last:.4f} "
           f"improved={bool(last < first)}")
+    slow = monitor.stragglers()
+    if slow:
+        plan = monitor.rebalance_plan(microbatches_per_host=1)
+        print(f"stragglers={slow} rebalance_plan={plan}", flush=True)
 
 
 if __name__ == "__main__":

@@ -111,7 +111,7 @@ class ServeEngine:
                 continue
             req = slot.req
             if slot.prompt_cursor < len(req.prompt):
-                continue  # still prefolling the prompt
+                continue  # still prefilling the prompt
             tok = int(nxt[i])
             req.output.append(tok)
             slot.produced += 1
@@ -120,7 +120,7 @@ class ServeEngine:
                     (req.eos_id is not None and tok == req.eos_id):
                 req.finished_at = time.perf_counter()
                 self.done.append(req)
-                slot.req = None
+                slot.req = None  # retire: slot is admissible next tick
         return active
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:

@@ -3,7 +3,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.band_mv.ops import band_mv
 from repro.kernels.band_mv.ref import (band_mv_ref, band_to_dense,
@@ -37,9 +36,13 @@ def test_band_roundtrip():
                                np.asarray(A), atol=1e-14)
 
 
-@settings(max_examples=12, deadline=None)
-@given(n=st.sampled_from([32, 64, 80]), w=st.integers(1, 8),
-       seed=st.integers(0, 2**20))
+# deterministic stand-in for the former hypothesis sweep: fixed seeds over
+# the same (n, w) envelope, so tier-1 collects on a bare jax install
+@pytest.mark.parametrize("n,w,seed", [
+    (32, 1, 0), (32, 8, 11), (64, 2, 222), (64, 5, 3_333),
+    (64, 7, 44_444), (80, 1, 555_555), (80, 4, 65_521), (80, 8, 1_048_575),
+    (32, 3, 7), (64, 8, 99), (80, 6, 2**20), (32, 5, 12_345),
+])
 def test_band_mv_property(n, w, seed):
     A, band, x = _band_problem(n, w, jax.random.PRNGKey(seed))
     got = band_mv(band, x, w=w, bm=32)

@@ -156,6 +156,7 @@ def test_plan_remesh_rejects_impossible():
 
 # ---------------------------------------------------------- partitioning --
 
+@pytest.mark.slow
 def test_partitioning_rules_shape_aware():
     """Run in a subprocess with 8 host devices to exercise a real mesh."""
     code = textwrap.dedent("""
@@ -196,6 +197,7 @@ def test_partitioning_rules_shape_aware():
     assert "PARTITION_OK" in out.stdout, out.stdout + out.stderr
 
 
+@pytest.mark.slow
 def test_sharded_la_multidevice():
     """Distributed symv/gemm/cholesky/trsm on an 8-device subprocess mesh."""
     code = textwrap.dedent("""
@@ -237,6 +239,7 @@ def test_sharded_la_multidevice():
     assert "SHARDED_LA_OK" in out.stdout, out.stdout + out.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_distributed_ke_pipeline_end_to_end():
     """The full distributed KE solve matches the exact spectrum (8 devices)."""
     code = textwrap.dedent("""

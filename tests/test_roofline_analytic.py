@@ -20,8 +20,8 @@ def _hlo_flops(cfg, B, S):
         return logits
 
     compiled = jax.jit(f).lower(params, toks).compile()
-    ca = compiled.cost_analysis() or {}
-    return float(ca.get("flops", 0.0))
+    from repro.analysis.roofline import cost_analysis_dict
+    return float(cost_analysis_dict(compiled).get("flops", 0.0))
 
 
 @pytest.mark.parametrize("arch", ["mistral-large-123b", "qwen1.5-32b"])
