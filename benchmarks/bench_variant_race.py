@@ -1,0 +1,134 @@
+"""Variant race: distributed TT vs distributed KE, per stage, per problem.
+
+Runs both distributed pipelines (``repro.dist.eigensolver``) on the two
+generators from ``data/problems.py`` — ``md_like`` (separated spectrum,
+Krylov-friendly) and ``dft_like`` (clustered valence band, reduction-
+friendly) — over an 8-host-device (4, 2) data x model mesh, and records
+per-stage wall-clock next to the cost model's predictions and the
+router's pick. On a CPU host the absolute times measure partitioning
+overhead, not parallel speedup; the payload to read is (a) the per-stage
+*shape* of TT vs KE and (b) whether ``choose_variant`` agrees with the
+measured winner.
+
+Standalone (sets its own XLA flags, so run it directly, not via run.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_variant_race [--n 96 --s 4]
+
+Emits ``artifacts/BENCH_variant_race.json`` and prints the usual
+``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+
+import jax       # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+
+def bench_variant(variant: str, prob, s: int, band_width: int, m: int,
+                  mesh, repeats: int) -> dict:
+    from repro.dist.eigensolver import solve_ke_distributed, solve_tt_distributed
+
+    def run():
+        if variant == "TT":
+            return solve_tt_distributed(mesh, prob.A, prob.B, s,
+                                        band_width=band_width,
+                                        return_info=True)
+        return solve_ke_distributed(mesh, prob.A, prob.B, s, m=m,
+                                    max_restarts=300, return_info=True)
+
+    evals, X, info = run()           # warmup: compiles every stage
+    walls, stage_runs = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        evals, X, info = run()
+        walls.append(time.perf_counter() - t0)
+        stage_runs.append(info["stage_times"])
+    # median wall; per-stage medians across repeats
+    stages = {k: sorted(r[k] for r in stage_runs)[len(stage_runs) // 2]
+              for k in stage_runs[0]}
+    err = float(np.max(np.abs(np.asarray(evals)
+                              - np.asarray(prob.exact_evals[:s]))))
+    rec = {
+        "variant": variant,
+        "problem": prob.name,
+        "wall_s_median": sorted(walls)[len(walls) // 2],
+        "stage_times_s": {k: round(v, 5) for k, v in stages.items()},
+        "max_abs_eval_error": err,
+    }
+    for k in ("n_matvec", "n_restart", "converged", "band_width"):
+        if k in info:
+            rec[k] = info[k]
+    return rec
+
+
+def main() -> None:
+    from repro.analysis.variant_model import choose_variant, predict_stage_times
+    from repro.data.problems import dft_like, md_like
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--s", type=int, default=4)
+    ap.add_argument("--m", type=int, default=48)
+    ap.add_argument("--band-width", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--outdir", default="artifacts")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    out = {"n": args.n, "s": args.s, "mesh": "4x2",
+           "n_devices": jax.device_count(), "races": []}
+    for gen, clustered in ((md_like, False), (dft_like, True)):
+        prob = gen(args.n)
+        choice = choose_variant(args.n, args.s, band_width=args.band_width,
+                                m=args.m, clustered=clustered,
+                                mesh_shape=(4, 2))
+        race = {"problem": prob.name, "router": choice.as_json_dict(),
+                "predicted_stage_times_s": {
+                    v: predict_stage_times(v, args.n, args.s,
+                                           band_width=args.band_width,
+                                           m=args.m, clustered=clustered,
+                                           mesh_shape=(4, 2))
+                    for v in ("TT", "KE")},
+                "measured": []}
+        for variant in ("TT", "KE"):
+            race["measured"].append(
+                bench_variant(variant, prob, args.s, args.band_width,
+                              args.m, mesh, args.repeats))
+        measured_winner = min(race["measured"],
+                              key=lambda r: r["wall_s_median"])["variant"]
+        race["measured_winner"] = measured_winner
+        race["router_agrees"] = measured_winner == choice.variant
+        out["races"].append(race)
+
+    print("name,us_per_call,derived")
+    for race in out["races"]:
+        for r in race["measured"]:
+            print(f"bench_variant_race_{race['problem']}_{r['variant']},"
+                  f"{r['wall_s_median'] * 1e6:.1f},"
+                  f"eval_err={r['max_abs_eval_error']:.3e}")
+        print(f"bench_variant_race_{race['problem']}_router,0.0,"
+              f"pick={race['router']['variant']};"
+              f"measured={race['measured_winner']};"
+              f"agrees={race['router_agrees']}")
+
+    os.makedirs(args.outdir, exist_ok=True)
+    path = os.path.join(args.outdir, "BENCH_variant_race.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

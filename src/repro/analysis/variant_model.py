@@ -1,0 +1,224 @@
+"""Flop/bandwidth cost model for the four GSYEIG variants + variant router.
+
+Predicts per-stage times for TD/TT/KE/KI from ``(n, s, band_width,
+estimated Lanczos iterations, mesh shape)`` and exposes
+``choose_variant(...)`` — the production feature Imachi & Hoshi
+(arXiv:1504.06443) argue for: hybrid selection between the direct
+(reduction) and iterative (Krylov) paths.
+
+Model: every stage is (flops, bytes, collective_bytes); its time is the
+roofline ``max(flops / (P * peak_flops), bytes / (P * mem_bw)) +
+collective_bytes / link_bw`` with P = number of devices. This is exactly
+the three-term split of ``analysis.roofline``; the default
+``MachineParams`` are the paper's multicore regime (flop:byte ratio ~5)
+and ``MachineParams.tpu_v5e()`` reuses the roofline constants. A measured
+calibration point can be folded in from a compiled executable via
+``MachineParams.from_compiled`` (which reads ``roofline.cost_analysis_dict``).
+
+The qualitative predictions reproduce the paper's Tables: TD1 is
+memory-bound (BLAS-2), TT converts it to compute-bound BLAS-3 at the cost
+of ~2x the flops, and KE/KI win exactly when the estimated iteration count
+is small relative to n (MD-like separated spectra) but lose on clustered
+DFT-like spectra that push Lanczos to thousands of iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+from repro.core.lanczos import default_subspace
+
+from .roofline import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16, cost_analysis_dict
+
+VARIANTS = ("TD", "TT", "KE", "KI")
+#: variants with a distributed implementation (``mesh=`` dispatch targets)
+DISTRIBUTED_VARIANTS = ("TT", "KE")
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    """Per-device throughput model. Defaults: the paper's multicore regime."""
+    peak_flops: float = 500e9      # FLOP/s per device
+    mem_bw: float = 100e9          # B/s per device
+    link_bw: float = 25e9          # B/s inter-device
+    dtype_bytes: int = 8
+
+    @classmethod
+    def tpu_v5e(cls) -> "MachineParams":
+        return cls(peak_flops=PEAK_FLOPS_BF16, mem_bw=HBM_BW,
+                   link_bw=ICI_LINK_BW, dtype_bytes=4)
+
+    @classmethod
+    def from_compiled(cls, compiled, wall_s: float,
+                      base: Optional["MachineParams"] = None) -> "MachineParams":
+        """Calibrate the effective flop rate from one measured executable.
+
+        ``compiled`` is a lowered-and-compiled jax executable;
+        ``roofline.cost_analysis_dict`` normalizes its cost analysis across
+        jax versions. The effective rate folds every unmodeled overhead
+        (dispatch, layout, fusion quality) into ``peak_flops`` while keeping
+        the modeled flop:byte ratio of ``base``.
+        """
+        base = base or cls()
+        ca = cost_analysis_dict(compiled)
+        flops = float(ca.get("flops", 0.0))
+        if flops <= 0.0 or wall_s <= 0.0:
+            return base
+        eff = flops / wall_s
+        scale = eff / base.peak_flops
+        return dataclasses.replace(base, peak_flops=eff,
+                                   mem_bw=base.mem_bw * scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    flops: float
+    bytes: float
+    collective_bytes: float = 0.0
+
+    def seconds(self, machine: MachineParams, n_devices: int) -> float:
+        p = max(int(n_devices), 1)
+        t_comp = self.flops / (p * machine.peak_flops)
+        t_mem = self.bytes / (p * machine.mem_bw)
+        t_coll = (self.collective_bytes / machine.link_bw
+                  if p > 1 else 0.0)
+        return max(t_comp, t_mem) + t_coll
+
+
+def estimate_lanczos_iters(n: int, s: int, m: Optional[int] = None,
+                           clustered: bool = False) -> int:
+    """Matvec-count heuristic for thick-restart Lanczos on the paper's
+    workloads: well-separated MD spectra converge in a few sweeps of the
+    restart subspace; clustered DFT valence bands take ~10x longer
+    (the paper's Experiment 2 hit ~4k iterations at s=448)."""
+    if m is None:
+        m = default_subspace(s, n)
+    per_restart = max(m - s, 1)
+    n_restarts = 24 if clustered else 4
+    return int(min(n * 2, m + n_restarts * per_restart))
+
+
+def _mesh_devices(mesh_shape: Optional[Sequence[int]]) -> int:
+    if not mesh_shape:
+        return 1
+    p = 1
+    for d in mesh_shape:
+        p *= int(d)
+    return p
+
+
+def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
+                m: Optional[int] = None, n_iter: Optional[int] = None,
+                clustered: bool = False,
+                machine: Optional[MachineParams] = None,
+                ) -> Dict[str, StageCost]:
+    """Per-stage (flops, bytes, collective_bytes) for one variant.
+
+    Flop counts are the standard LAPACK/SBR operation counts; byte counts
+    encode each stage's BLAS level (BLAS-2 stages stream the trailing
+    matrix once per reflector — the n^3-bytes signature of DSYTRD — while
+    BLAS-3 stages touch each operand O(n/block) times, modeled as a small
+    constant number of passes).
+    """
+    assert variant in VARIANTS, variant
+    machine = machine or MachineParams()
+    b = machine.dtype_bytes
+    n3, n2 = float(n) ** 3, float(n) ** 2
+    w = band_width
+    if m is None:
+        m = default_subspace(s, n)
+    if n_iter is None:
+        n_iter = estimate_lanczos_iters(n, s, m, clustered=clustered)
+    coll_panel = n2 * b  # O(n w) panel broadcast x (n / w) panels
+
+    costs: Dict[str, StageCost] = {}
+    # GS1: blocked Cholesky — BLAS-3
+    costs["GS1"] = StageCost(n3 / 3.0, 3 * n2 * b, coll_panel / 2)
+    # GS2: two full-matrix TRSMs (the paper's 2n^3 pick) — BLAS-3
+    if variant != "KI":
+        costs["GS2"] = StageCost(2 * n3, 6 * n2 * b, coll_panel)
+
+    if variant == "TD":
+        # TD1: BLAS-2 tridiagonalization — 4/3 n^3 flops but the trailing
+        # matrix is streamed once per reflector: ~n^3/3 elements read.
+        costs["TD1"] = StageCost(4 * n3 / 3.0, (n3 / 3.0) * b)
+        costs["TD2"] = StageCost(60.0 * n * s, 10.0 * n * s * b)
+        costs["TD3"] = StageCost(4 * n2 * s, 3 * n2 * b)
+    elif variant == "TT":
+        # TT1: band reduction 4/3 n^3 + explicit Q1 accumulation 2 n^3,
+        # all GEMMs (BLAS-3: the trailing matrix streams once per panel,
+        # n/w passes — the 1/w factor is what makes TT compute-bound)
+        costs["TT1"] = StageCost(4 * n3 / 3.0 + 2 * n3,
+                                 (n3 / max(w, 1)) * b, coll_panel)
+        # TT2: bulge chasing, O(n^2 w) flops on the O(n w) band
+        costs["TT2"] = StageCost(6 * n2 * w, 6 * n2 * w * b / 8)
+        costs["TT3"] = StageCost(60.0 * n * s, 10.0 * n * s * b)
+        costs["TT4"] = StageCost(2 * n2 * s + 2 * n * s * s, 3 * n2 * b,
+                                 n * s * b)
+    else:
+        # Krylov iteration: each matvec streams the n^2 operand (memory
+        # bound); re-orthogonalization adds 8 n m flops per step. KI's
+        # implicit operator is two triangular solves + one SYMV.
+        mv_flops = (2 * n2 if variant == "KE" else 4 * n2) + 8.0 * n * m
+        mv_bytes = (n2 if variant == "KE" else 2 * n2) * b + 2.0 * n * m * b
+        costs[f"{variant}_iter"] = StageCost(
+            n_iter * mv_flops, n_iter * mv_bytes, n_iter * n * b)
+
+    # BT1: X = U^{-1} Y, one TRSM on an (n, s) slab
+    costs["BT1"] = StageCost(n2 * s, 2 * n2 * b, n * s * b)
+    return costs
+
+
+def predict_stage_times(variant: str, n: int, s: int,
+                        machine: Optional[MachineParams] = None,
+                        mesh_shape: Optional[Sequence[int]] = None,
+                        **kw) -> Dict[str, float]:
+    """Predicted seconds per stage (plus 'Tot.') for one variant."""
+    machine = machine or MachineParams()
+    p = _mesh_devices(mesh_shape)
+    costs = stage_costs(variant, n, s, machine=machine, **kw)
+    times = {k: c.seconds(machine, p) for k, c in costs.items()}
+    times["Tot."] = sum(times.values())
+    return times
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantChoice:
+    variant: str
+    predicted_s: float
+    table: Dict[str, float]          # variant -> predicted total seconds
+    n_devices: int
+
+    def as_json_dict(self) -> dict:
+        return {"variant": self.variant,
+                "predicted_s": float(self.predicted_s),
+                "table": {k: float(v) for k, v in self.table.items()},
+                "n_devices": int(self.n_devices)}
+
+
+def choose_variant(n: int, s: int, band_width: int = 8,
+                   m: Optional[int] = None, n_iter: Optional[int] = None,
+                   clustered: bool = False,
+                   machine: Optional[MachineParams] = None,
+                   mesh_shape: Optional[Sequence[int]] = None,
+                   allow: Optional[Sequence[str]] = None) -> VariantChoice:
+    """Pick the fastest variant under the cost model.
+
+    With a multi-device ``mesh_shape`` the candidate set narrows to the
+    variants that actually have a distributed implementation (TT, KE);
+    ties break toward the earlier entry of ``VARIANTS`` for determinism.
+    """
+    p = _mesh_devices(mesh_shape)
+    if allow is None:
+        allow = DISTRIBUTED_VARIANTS if p > 1 else VARIANTS
+    table: Dict[str, float] = {}
+    for v in VARIANTS:
+        if v not in allow:
+            continue
+        table[v] = predict_stage_times(
+            v, n, s, machine=machine, mesh_shape=mesh_shape,
+            band_width=band_width, m=m, n_iter=n_iter,
+            clustered=clustered)["Tot."]
+    best = min(table, key=lambda v: (table[v], VARIANTS.index(v)))
+    return VariantChoice(variant=best, predicted_s=table[best], table=table,
+                         n_devices=p)

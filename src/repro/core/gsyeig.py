@@ -9,6 +9,8 @@ Four variants, exactly the paper's:
 `which='smallest'|'largest'` selects the end of the spectrum;
 `invert=True` applies the paper's MD trick (solve the inverse pair (B, A)
 for its largest eigenpairs — valid when A is also SPD — and map back).
+`variant='auto'` routes through the cost model in
+``repro.analysis.variant_model`` (see ``info['router']`` for the decision).
 
 Every stage is individually jitted and timed (paper Tables 2/6 keys).
 """
@@ -83,16 +85,39 @@ def solve(
     use_kernel: bool = False,
     key: jax.Array | None = None,
     mesh=None,
+    clustered: bool = False,
 ) -> GSyEigResult:
     """`mesh=` (a jax.sharding.Mesh with a 'model' axis plus data axes)
-    dispatches the KE variant onto the distributed pipeline in
+    dispatches the KE and TT variants onto the distributed pipelines in
     ``repro.dist.eigensolver`` — same driver logic, every stage routed
-    through ``repro.dist.sharded_la`` and every matvec a ``dist_symv``."""
-    assert variant in VARIANTS, variant
+    through ``repro.dist.sharded_la`` (KE: every matvec a ``dist_symv``;
+    TT: ELPA2-style distributed two-stage band reduction).
+
+    ``variant='auto'`` asks the flop/bandwidth cost model in
+    ``repro.analysis.variant_model`` to pick the fastest variant for
+    ``(n, s, band_width, mesh)``; the choice and its predicted-time table
+    land in ``result.info['router']``. ``clustered=True`` tells the router
+    the wanted end of the spectrum is clustered (DFT-like valence bands),
+    which inflates the Lanczos iteration estimate ~10x — the decisive
+    input for the KE-vs-TT crossover."""
     n = A.shape[0]
     times: Dict[str, float] = {}
     info: Dict[str, Any] = {"variant": variant, "n": n, "s": s,
                             "invert": invert, "which": which}
+    if variant == "auto":
+        from repro.analysis.variant_model import (DISTRIBUTED_VARIANTS,
+                                                  choose_variant)
+        mesh_shape = tuple(mesh.devices.shape) if mesh is not None else None
+        # any mesh (even a degenerate 1x1) narrows the candidates to the
+        # variants the mesh dispatch below actually implements
+        allow = DISTRIBUTED_VARIANTS if mesh is not None else None
+        choice = choose_variant(n, s, band_width=band_width, m=m,
+                                clustered=clustered, mesh_shape=mesh_shape,
+                                allow=allow)
+        variant = choice.variant
+        info["variant"] = variant
+        info["router"] = choice.as_json_dict()
+    assert variant in VARIANTS, variant
     if key is None:
         key = jax.random.PRNGKey(20120520)
 
@@ -103,19 +128,26 @@ def solve(
         which = "largest" if which == "smallest" else "smallest"
 
     if mesh is not None:
-        if variant != "KE":
+        if variant not in ("KE", "TT"):
             raise NotImplementedError(
-                f"mesh= dispatch implements the KE variant, got {variant}")
+                f"mesh= dispatch implements the KE and TT variants, "
+                f"got {variant}")
         if gs2 != "trsm" or use_kernel:
-            # the distributed pipeline is blocked-Cholesky + two-TRSM with
-            # shard_map matvecs; reject flags it cannot honor rather than
+            # the distributed pipelines are blocked-Cholesky + two-TRSM with
+            # shard_map stages; reject flags they cannot honor rather than
             # silently substituting
             raise NotImplementedError(
                 "mesh= implements gs2='trsm' without the Pallas kernel path")
-        from repro.dist.eigensolver import solve_ke_distributed
-        lam, X, dinfo = solve_ke_distributed(
-            mesh, A, B, s, m=m, which=which, tol=tol,
-            max_restarts=max_restarts, key=key, return_info=True)
+        if variant == "KE":
+            from repro.dist.eigensolver import solve_ke_distributed
+            lam, X, dinfo = solve_ke_distributed(
+                mesh, A, B, s, m=m, which=which, tol=tol,
+                max_restarts=max_restarts, key=key, return_info=True)
+        else:
+            from repro.dist.eigensolver import solve_tt_distributed
+            lam, X, dinfo = solve_tt_distributed(
+                mesh, A, B, s, which=which, band_width=band_width, key=key,
+                return_info=True)
         times.update(dinfo.pop("stage_times"))
         info.update(dinfo)
         return _finalize(lam, X, B_orig, invert, times, info)
@@ -168,9 +200,12 @@ def solve(
                              use_kernel=use_kernel)
         jax.block_until_ready(lres.evecs)
         times[f"{prefix}_iter"] = time.perf_counter() - t0
-        info.update(n_matvec=lres.n_matvec, n_restart=lres.n_restart,
+        # plain-Python payloads only: info must survive json.dump in the
+        # benchmark scripts (a jax array here broke them)
+        info.update(n_matvec=int(lres.n_matvec), n_restart=int(lres.n_restart),
                     converged=bool(lres.converged),
-                    resid_bounds=jnp.asarray(lres.resid_bounds))
+                    resid_bounds=[float(r) for r in
+                                  jnp.asarray(lres.resid_bounds)])
         lam, Y = lres.evals, lres.evecs
         # Lanczos returns wanted-first ordering; sort ascending like TD/TT
         order = jnp.argsort(lam)

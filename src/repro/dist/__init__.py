@@ -15,17 +15,19 @@ straggler     per-step timing monitor + microbatch rebalance plans
 elastic       ``plan_remesh`` — recompute the mesh after device churn
 partitioning  PartitionSpec rules for params / optimizer / decode state /
               batches (expert-parallel MoE, B=1 no-shard guard)
-sharded_la    ``dist_symv`` / ``dist_gemm`` / ``dist_cholesky`` /
-              ``dist_trsm_left_t`` — the paper's stage kernels over a 2-D
+sharded_la    ``dist_symv`` / ``dist_gemm`` / ``dist_syr2k`` /
+              ``dist_cholesky`` / ``dist_trsm_left_t`` and the compact-WY
+              panel updates — the paper's stage kernels over a 2-D
               ``shard_map`` mesh
 eigensolver   ``solve_ke_distributed`` — the full KE pipeline where every
-              matvec is a ``dist_symv``
+              matvec is a ``dist_symv``; ``solve_tt_distributed`` — the
+              ELPA2-style distributed two-stage reduction (TT)
 """
 from . import (checkpoint, compression, elastic, partitioning, sharded_la,
                straggler)
-from .eigensolver import solve_ke_distributed
+from .eigensolver import solve_ke_distributed, solve_tt_distributed
 
 __all__ = [
     "checkpoint", "compression", "elastic", "partitioning", "sharded_la",
-    "straggler", "solve_ke_distributed",
+    "straggler", "solve_ke_distributed", "solve_tt_distributed",
 ]

@@ -1,13 +1,26 @@
-"""Distributed KE pipeline: Cholesky -> standard form -> thick-restart
-Lanczos where every matvec is a ``dist_symv`` -> back-transform.
+"""Distributed KE and TT pipelines over a 2-D device mesh.
 
-Stage-for-stage the paper's KE variant, with each dense stage routed
+Stage-for-stage the paper's variants, with each dense stage routed
 through ``sharded_la``:
 
+KE (``solve_ke_distributed``):
   GS1  U = dist_cholesky(B)                  (row-block panels)
   GS2  C = U^{-T} A U^{-1}                   (two dist_trsm_left_t solves)
   KE1  thick-restart Lanczos on C            (matvec = dist_symv; the
        projected (m x m) problem stays replicated — it is tiny)
+  BT1  X = U^{-1} Y                          (dist_trsm_left)
+
+TT (``solve_tt_distributed``, the ELPA2-style two-stage path):
+  GS1/GS2 as above, then
+  TT1  dense -> band of width w              (replicated panel QR of the
+       O(n w) panel + distributed SYR2K trailing update + distributed
+       explicit Q1 accumulation — all BLAS-3, see ``dist_reduce_to_band``)
+  TT2  band -> tridiagonal                   (replicated Givens bulge
+       chasing on the O(n w) band; Q2 accumulated separately so Q1 never
+       leaves the mesh)
+  TT3  bisection + inverse iteration         (replicated, O(n s))
+  TT4  Y = Q1 (Q2 Z)                         (collective-free panel matmul
+       against the mesh-resident Q1)
   BT1  X = U^{-1} Y                          (dist_trsm_left)
 
 The Lanczos driver itself is ``core.lanczos.lanczos_solve`` — the
@@ -24,8 +37,33 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.lanczos import default_subspace, lanczos_solve
-from .sharded_la import (_row_spec, dist_cholesky, dist_symv,
-                         dist_trsm_left, dist_trsm_left_t)
+from repro.core.linalg_utils import qr_wy_masked, symmetrize
+from repro.core.sbr import band_to_tridiag
+from repro.core.tridiag_eig import eigh_tridiag_selected
+from .sharded_la import (_row_spec, _row_sharded, dist_apply_wy_right,
+                         dist_apply_wy_two_sided, dist_cholesky,
+                         dist_panel_matmul, dist_symv, dist_trsm_left,
+                         dist_trsm_left_t)
+
+
+def _make_timer(times: dict):
+    """Per-stage wall-clock accumulator shared by both pipelines."""
+    def timed(name, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times[name] = times.get(name, 0.0) + (time.perf_counter() - t0)
+        return out
+    return timed
+
+
+def _standard_form(mesh, A, B, timed):
+    """GS1 + GS2 (shared by KE and TT): B = U^T U, C = U^{-T} A U^{-1}
+    via two transposed panel solves, resymmetrized."""
+    U = timed("GS1", lambda b: dist_cholesky(mesh, b), B)
+    T1 = timed("GS2", lambda a: dist_trsm_left_t(mesh, U, a), A)
+    C = timed("GS2", lambda t: dist_trsm_left_t(mesh, U, t.T).T, T1)
+    return U, 0.5 * (C + C.T)
 
 
 def solve_ke_distributed(
@@ -52,20 +90,9 @@ def solve_ke_distributed(
     if key is None:
         key = jax.random.PRNGKey(20120520)
     times = {}
+    timed = _make_timer(times)
 
-    def timed(name, fn, *args):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times[name] = times.get(name, 0.0) + (time.perf_counter() - t0)
-        return out
-
-    # GS1: B = U^T U
-    U = timed("GS1", lambda b: dist_cholesky(mesh, b), B)
-    # GS2: C = U^{-T} A U^{-1} via two transposed panel solves
-    T1 = timed("GS2", lambda a: dist_trsm_left_t(mesh, U, a), A)
-    C = timed("GS2", lambda t: dist_trsm_left_t(mesh, U, t.T).T, T1)
-    C = 0.5 * (C + C.T)
+    U, C = _standard_form(mesh, A, B, timed)
     # the Krylov operand lives 2-D-sharded: rows over data axes, cols over
     # 'model' — the layout dist_symv consumes
     C = jax.device_put(C, NamedSharding(mesh, P(_row_spec(mesh), "model")))
@@ -89,5 +116,109 @@ def solve_ke_distributed(
         info = {"stage_times": times, "n_matvec": int(res.n_matvec),
                 "n_restart": int(res.n_restart),
                 "converged": bool(res.converged)}
+        return lam, X, info
+    return lam, X
+
+
+# -------------------------------------------------------- TT pipeline -----
+
+# fixed-shape helpers shared by every panel iteration (compile once each):
+# column-slice with a traced start, and the masked panel QR.
+_slice_cols = jax.jit(
+    lambda M, c0, w: jax.lax.dynamic_slice(M, (0, c0), (M.shape[0], w)),
+    static_argnames=("w",))
+_jit_qr_masked = jax.jit(qr_wy_masked)
+_jit_band_clean = jax.jit(
+    lambda M, w: symmetrize(jnp.where(
+        jnp.abs(jnp.arange(M.shape[0])[:, None]
+                - jnp.arange(M.shape[0])[None, :]) <= w, M, 0.0)),
+    static_argnames=("w",))
+
+
+def dist_reduce_to_band(mesh, C, w: int = 8):
+    """TT1: distributed Q1^T C Q1 = W (bandwidth w) on row-sharded storage.
+
+    Per panel: the (n, w) panel is gathered and QR-factored replicated
+    (it is O(n w) — tiny next to the O(n^2 w) trailing update), then the
+    two-sided compact-WY update runs as a distributed panel-matmul +
+    ``dist_syr2k`` and Q1 is accumulated in place on the mesh with
+    ``dist_apply_wy_right``. Every heavy flop is a local GEMM on a row
+    block; the only data that moves is the O(n w) panel per iteration.
+
+    Returns ``(W, Q1)`` both row-block-sharded on the mesh. Storage note:
+    like ``core.sbr.reduce_to_band``, W is kept in full dense (n, n) form
+    (flop-shape-faithful; the O(n w) packed-band layout is the TPU-side
+    optimization discussed in core/sbr.py).
+    """
+    n = C.shape[0]
+    row_sh = _row_sharded(mesh, C)
+    rep = NamedSharding(mesh, P(None, None))
+    M = jax.device_put(C, row_sh)
+    Q1 = jax.device_put(jnp.eye(n, dtype=C.dtype), row_sh)
+    n_panels = len(range(0, max(n - w - 1, 0), w))
+    for k in range(n_panels):
+        c0 = k * w
+        E = jax.device_put(_slice_cols(M, c0, w), rep)
+        V, T, _ = _jit_qr_masked(E, jnp.asarray(c0 + w))
+        V = jax.device_put(V, rep)
+        M = dist_apply_wy_two_sided(mesh, M, V, T)
+        Q1 = dist_apply_wy_right(mesh, Q1, V, T)
+    W = jax.device_put(_jit_band_clean(M, w), row_sh)
+    return W, Q1
+
+
+def solve_tt_distributed(
+    mesh,
+    A: jax.Array,
+    B: jax.Array,
+    s: int,
+    which: str = "smallest",
+    band_width: int = 8,
+    key: Optional[jax.Array] = None,
+    return_info: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """s extremal eigenpairs of A X = B X Lambda via the distributed
+    two-stage reduction (the paper's TT variant, ELPA2-style).
+
+    The band reduction (TT1) and every O(n^3)/O(n^2 s) GEMM/TRSM stay on
+    the mesh; the bulge chase (TT2) and the tridiagonal eigensolver (TT3)
+    run replicated — they are the O(n^2 w)/O(n s) stages the paper measures
+    as negligible. Returns ``(evals (s,) ascending, X (n, s))``; with
+    ``return_info=True`` a third dict carries per-stage wall-clock times.
+    """
+    n = A.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(20120520)
+    times = {}
+    timed = _make_timer(times)
+
+    U, C = _standard_form(mesh, A, B, timed)
+
+    # TT1: dense -> band, Q1 stays mesh-resident
+    W, Q1 = timed("TT1", lambda c: dist_reduce_to_band(mesh, c, band_width),
+                  C)
+
+    # TT2: band -> tridiagonal, replicated (O(n^2 w) Givens work). Q2 is
+    # accumulated from identity so Q1 — the O(n^2) object — never gathers.
+    rep = NamedSharding(mesh, P(None, None))
+    W_rep = jax.device_put(W, rep)
+    tri = timed("TT2", lambda wr: band_to_tridiag(
+        wr, jnp.eye(n, dtype=A.dtype), band_width), W_rep)
+
+    # TT3: selected eigenpairs of the tridiagonal (replicated, O(n s))
+    ks = jnp.arange(s) if which == "smallest" else jnp.arange(n - s, n)
+    lam, Z = timed("TT3", lambda d, e: eigh_tridiag_selected(d, e, ks, key),
+                   tri.d, tri.e)
+
+    # TT4: Y = Q1 (Q2 Z) — the (n, s) slab is replicated, so the product
+    # against the row-sharded Q1 is a collective-free panel matmul
+    Y = timed("TT4", lambda q2, z: dist_panel_matmul(mesh, Q1, q2 @ z),
+              tri.Q, Z)
+
+    # BT1: X = U^{-1} Y
+    X = timed("BT1", lambda y: dist_trsm_left(mesh, U, y), Y)
+
+    if return_info:
+        info = {"stage_times": times, "band_width": int(band_width)}
         return lam, X, info
     return lam, X

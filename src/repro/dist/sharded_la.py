@@ -108,6 +108,73 @@ def dist_gemm_rs(mesh, A, B):
                      out_specs=P(_row_model_spec(mesh), None))(A, B)
 
 
+# -------------------------------------------------------------- syr2k -----
+
+def dist_syr2k(mesh, C, V, W):
+    """Rank-2w update C - V W^T - W V^T (DSYR2K, the band-reduction trailing
+    update) with C row-block-sharded and V, W (n, w) panels.
+
+    Each device updates its row block from its slice of V/W plus the full
+    (replicated) panels — no collective at all: the panels are O(n w) and
+    ride in replicated, so the O(n^2 w) flops are embarrassingly row-parallel.
+    """
+    rs = _row_spec(mesh)
+
+    def local(c_blk, v_blk, w_blk, v_full, w_full):
+        return c_blk - v_blk @ w_full.T - w_blk @ v_full.T
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(rs, None), P(rs, None), P(rs, None),
+                               P(None, None), P(None, None)),
+                     out_specs=P(rs, None))(C, V, W, V, W)
+
+
+def dist_panel_matmul(mesh, C, V):
+    """X = C V with C row-block-sharded and V an (n, w) replicated panel:
+    local tile matmul, output row-sharded, no collective."""
+    rs = _row_spec(mesh)
+
+    def local(c_blk, v_full):
+        return c_blk @ v_full
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(rs, None), P(None, None)),
+                     out_specs=P(rs, None))(C, V)
+
+
+def dist_apply_wy_two_sided(mesh, C, V, T):
+    """Q^T C Q for symmetric row-sharded C, Q = I - V T V^T (compact WY).
+
+    The two-sided update is refactored into SYR2K form (LAPACK DSYRDB):
+    with X = C V and S = T^T (V^T X) T,
+
+        Q^T C Q = C - Z V^T - V Z^T,   Z = X T - (1/2) V S,
+
+    (S is symmetric because C is) so the distributed work is one
+    panel matmul (X, row-parallel) plus one ``dist_syr2k``; the w x w
+    couplings S, T stay replicated.
+    """
+    X = dist_panel_matmul(mesh, C, V)
+    # panel couplings are O(n w) / O(w^2): compute replicated
+    S = T.T @ (V.T @ X) @ T
+    Z = X @ T - 0.5 * (V @ S)
+    return dist_syr2k(mesh, C, V, Z)
+
+
+def dist_apply_wy_right(mesh, M, V, T):
+    """M Q = M - ((M V) T) V^T for row-sharded M — the explicit Q1
+    accumulation of the band reduction (two GEMMs per panel, both local to
+    each row block since V rides in replicated)."""
+    rs = _row_spec(mesh)
+
+    def local(m_blk, v_full, t):
+        return m_blk - ((m_blk @ v_full) @ t) @ v_full.T
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(rs, None), P(None, None), P(None, None)),
+                     out_specs=P(rs, None))(M, V, T)
+
+
 # ----------------------------------------------------- panel factorizations
 
 def _n_row_shards(mesh) -> int:

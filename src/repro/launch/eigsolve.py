@@ -3,13 +3,17 @@
     PYTHONPATH=src python -m repro.launch.eigsolve \
         --problem md --n 512 --s 8 --variant KE --invert
 
-Distributed execution (KE only): ``--mesh DxM`` lays a (data=D, model=M)
+Distributed execution (KE and TT): ``--mesh DxM`` lays a (data=D, model=M)
 mesh over the visible devices and routes the solve through
 ``repro.dist`` (core.solve's ``mesh=`` dispatch); ``--devices N`` forces N
 host-platform devices for CPU testing, e.g.
 
     PYTHONPATH=src python -m repro.launch.eigsolve \
-        --problem md --n 64 --s 4 --variant KE --devices 8 --mesh 4x2
+        --problem md --n 64 --s 4 --variant TT --devices 8 --mesh 4x2
+
+``--variant auto`` defers the choice to the flop/bandwidth cost model in
+``repro.analysis.variant_model`` (the decision and its predicted-time
+table are printed in the payload under ``router``).
 """
 from __future__ import annotations
 
@@ -63,7 +67,7 @@ def main() -> None:
     ap.add_argument("--problem", choices=["md", "dft"], default="md")
     ap.add_argument("--n", type=int, default=384)
     ap.add_argument("--s", type=int, default=8)
-    ap.add_argument("--variant", choices=["TD", "TT", "KE", "KI"],
+    ap.add_argument("--variant", choices=["TD", "TT", "KE", "KI", "auto"],
                     default="KE")
     ap.add_argument("--which", choices=["smallest", "largest"],
                     default="smallest")
@@ -76,8 +80,9 @@ def main() -> None:
     ap.add_argument("--m", type=int, default=None)
     ap.add_argument("--max-restarts", type=int, default=300)
     ap.add_argument("--mesh", default=None,
-                    help="DATAxMODEL mesh (e.g. 4x2): run the KE variant "
-                         "through the repro.dist distributed pipeline")
+                    help="DATAxMODEL mesh (e.g. 4x2): run the KE or TT "
+                         "variant (or --variant auto, restricted to those "
+                         "two) through the repro.dist distributed pipeline")
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host-platform devices (set before the "
                          "jax import; pairs with --mesh on CPU)")
@@ -85,19 +90,26 @@ def main() -> None:
     args = ap.parse_args()
 
     mesh = _parse_mesh(args.mesh)
-    if mesh is not None and args.variant != "KE":
-        raise SystemExit("--mesh is only implemented for --variant KE")
+    if mesh is not None and args.variant not in ("KE", "TT", "auto"):
+        raise SystemExit("--mesh is only implemented for --variant "
+                         "KE, TT, or auto")
 
     prob = (md_like if args.problem == "md" else dft_like)(args.n)
     res = solve(prob.A, prob.B, args.s, variant=args.variant,
                 which=args.which, invert=args.invert, gs2=args.gs2,
                 td1=args.td1, band_width=args.band_width, m=args.m,
-                max_restarts=args.max_restarts, mesh=mesh)
+                max_restarts=args.max_restarts, mesh=mesh,
+                # the router's clustered-spectrum hint: the DFT generator's
+                # low end is the paper's slow-Lanczos regime
+                clustered=(args.problem == "dft"
+                           and args.which == "smallest"))
     acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
-    err = float(np.max(np.abs(np.asarray(res.evals)
-                              - np.asarray(prob.exact_evals[:args.s]))))
+    exact = np.asarray(prob.exact_evals)
+    want = exact[:args.s] if args.which == "smallest" else exact[-args.s:]
+    err = float(np.max(np.abs(np.asarray(res.evals) - want)))
     payload = {
-        "variant": args.variant,
+        "variant": res.info["variant"],
+        "requested_variant": args.variant,
         "n": args.n, "s": args.s,
         "mesh": args.mesh or "single",
         "n_devices": jax.device_count(),
@@ -108,6 +120,8 @@ def main() -> None:
         "max_abs_eval_error": err,
         "n_matvec": int(res.info.get("n_matvec", 0)),
     }
+    if "router" in res.info:
+        payload["router"] = res.info["router"]
     if args.json:
         print(json.dumps(payload, indent=1))
     else:

@@ -1,0 +1,62 @@
+"""Cross-variant accuracy harness — the paper's Table-3 metrics, enforced
+uniformly over every variant x problem generator x spectrum end.
+
+One shared tolerance table (TABLE3_TOLERANCES) governs all 16 cells; no
+per-test ad-hoc tolerances. The metrics are exactly ``core.residuals``'s:
+
+    relative_residual = ||A X - B X Lambda||_F / max(||A||_F, ||B||_F)
+    b_orthogonality   = ||X^T B X - I||_F / ||B||_F
+
+(the paper reports ~1e-15 in double precision; the table below leaves two
+orders of headroom for the clustered DFT low end, uniformly).
+"""
+import numpy as np
+import pytest
+
+from repro.core import VARIANTS, accuracy_report, solve
+from repro.data.problems import dft_like, md_like
+
+N, S = 96, 6
+
+# the single shared Table-3 tolerance table — every cell below must meet it
+TABLE3_TOLERANCES = {
+    "relative_residual": 1e-12,
+    "b_orthogonality": 1e-12,
+}
+
+PROBLEMS = {"md_like": md_like, "dft_like": dft_like}
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("problem", sorted(PROBLEMS))
+@pytest.mark.parametrize("which", ["smallest", "largest"])
+def test_table3_metrics(variant, problem, which):
+    prob = PROBLEMS[problem](N)
+    # the paper's MD methodology, not a tolerance tweak: Krylov variants
+    # solve the inverse pair (valid — md_like's A is SPD) for the smallest
+    # end, where the direct spectrum's relative gaps are tiny (Sec. 4.1)
+    invert = (problem == "md_like" and variant in ("KE", "KI")
+              and which == "smallest")
+    res = solve(prob.A, prob.B, S, variant=variant, which=which,
+                band_width=8, max_restarts=800, invert=invert)
+    acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
+    metrics = {"relative_residual": float(acc.relative_residual),
+               "b_orthogonality": float(acc.b_orthogonality)}
+    for name, tol in TABLE3_TOLERANCES.items():
+        assert metrics[name] <= tol, (
+            f"{variant}/{problem}/{which}: {name}={metrics[name]:.3e} "
+            f"exceeds the shared Table-3 tolerance {tol:.1e}")
+    # the harness also pins the spectrum: eigenvalues must be the known
+    # ground truth of the generator (ascending, correct end)
+    exact = np.asarray(prob.exact_evals)
+    want = exact[:S] if which == "smallest" else exact[-S:]
+    np.testing.assert_allclose(np.asarray(res.evals), want,
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_tolerance_table_is_shared():
+    """Guard against per-test tolerance drift: the table is the only
+    tolerance source and keeps the paper's two metrics, nothing else."""
+    assert set(TABLE3_TOLERANCES) == {"relative_residual",
+                                      "b_orthogonality"}
+    assert all(0 < t <= 1e-9 for t in TABLE3_TOLERANCES.values())

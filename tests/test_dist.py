@@ -239,6 +239,62 @@ def test_sharded_la_multidevice():
     assert "SHARDED_LA_OK" in out.stdout, out.stdout + out.stderr[-3000:]
 
 
+_TT_PARITY_TEMPLATE = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+    import jax, jax.numpy as jnp
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro.data.problems import md_like
+    from repro.core import solve
+    from repro.dist.eigensolver import solve_tt_distributed
+    mesh = jax.make_mesh({mesh_shape}, ("data", "model"))
+    prob = md_like({n})
+    ref = solve(prob.A, prob.B, {s}, variant="TT", band_width={w})
+    evals, X = solve_tt_distributed(mesh, prob.A, prob.B, {s},
+                                    band_width={w})
+    np.testing.assert_allclose(np.asarray(evals), np.asarray(ref.evals),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(evals),
+                               np.asarray(prob.exact_evals[:{s}]),
+                               rtol=1e-7, atol=1e-9)
+    R = np.asarray(prob.A @ X - (prob.B @ X) * np.asarray(evals)[None, :])
+    rel = np.linalg.norm(R) / np.linalg.norm(np.asarray(prob.A))
+    assert rel < 1e-10, rel
+    # the auto router must dispatch onto a distributed variant and agree
+    res_auto = solve(prob.A, prob.B, {s}, variant="auto", mesh=mesh,
+                     band_width={w})
+    assert res_auto.info["variant"] in ("TT", "KE"), res_auto.info
+    assert res_auto.info["router"]["n_devices"] == {ndev}
+    np.testing.assert_allclose(np.asarray(res_auto.evals),
+                               np.asarray(prob.exact_evals[:{s}]),
+                               rtol=1e-6, atol=1e-8)
+    print("DIST_TT_OK")
+"""
+
+
+def _run_tt_parity(ndev, mesh_shape, n, s, w):
+    code = textwrap.dedent(_TT_PARITY_TEMPLATE.format(
+        ndev=ndev, mesh_shape=mesh_shape, n=n, s=s, w=w))
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "DIST_TT_OK" in out.stdout, out.stdout + out.stderr[-3000:]
+
+
+def test_distributed_tt_parity_two_device():
+    """Fast lane: the distributed two-stage (TT) pipeline on a 2-device
+    (1, 2) mesh matches the local TT eigenvalues to 1e-6."""
+    _run_tt_parity(2, (1, 2), n=48, s=4, w=4)
+
+
+@pytest.mark.slow
+def test_distributed_tt_parity_eight_device():
+    """The full 8-device (4, 2) mesh variant of the TT parity check."""
+    _run_tt_parity(8, (4, 2), n=64, s=4, w=8)
+
+
 @pytest.mark.slow
 def test_distributed_ke_pipeline_end_to_end():
     """The full distributed KE solve matches the exact spectrum (8 devices)."""

@@ -1,0 +1,45 @@
+"""`GSyEigResult.info` must be JSON-serializable at the boundary: the
+benchmark scripts `json.dump` it verbatim, and a jax array smuggled into
+`info` (resid_bounds used to be one) breaks them at write time."""
+import json
+
+import pytest
+
+from repro.core import solve
+from repro.data.problems import md_like
+
+N, S = 64, 4
+
+
+@pytest.fixture(scope="module")
+def ke_result():
+    prob = md_like(N)
+    return solve(prob.A, prob.B, S, variant="KE")
+
+
+def test_info_json_roundtrip(ke_result):
+    payload = json.dumps(ke_result.info)          # must not raise
+    back = json.loads(payload)
+    assert back["variant"] == "KE"
+    assert back["n"] == N and back["s"] == S
+    assert back["n_matvec"] == ke_result.info["n_matvec"]
+
+
+def test_resid_bounds_plain_lists(ke_result):
+    rb = ke_result.info["resid_bounds"]
+    assert isinstance(rb, list) and len(rb) == S
+    assert all(isinstance(x, float) for x in rb)
+
+
+def test_stage_times_json_clean(ke_result):
+    times = json.loads(json.dumps(ke_result.stage_times))
+    assert "Tot." in times
+    assert all(isinstance(v, float) for v in times.values())
+
+
+def test_auto_router_info_json_clean():
+    prob = md_like(48)
+    res = solve(prob.A, prob.B, 3, variant="auto")
+    back = json.loads(json.dumps(res.info))
+    assert back["router"]["variant"] == back["variant"]
+    assert set(back["router"]["table"]) >= {"TD", "TT"}

@@ -1,0 +1,119 @@
+"""Cost-model variant router: golden decision table + auto-dispatch sweep."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.variant_model import (DISTRIBUTED_VARIANTS, MachineParams,
+                                          VARIANTS, choose_variant,
+                                          estimate_lanczos_iters,
+                                          predict_stage_times, stage_costs)
+from repro.core import solve
+from repro.data.problems import dft_like, md_like
+
+# ------------------------------------------------- golden decision table --
+# Frozen over a fixed (n, s, mesh, clustered) grid with the default
+# (multicore) MachineParams. The entries encode the paper's conclusions:
+# KE wins the MD regime (s << n, separated spectrum, moderate iterations),
+# the two-stage reduction wins the clustered-DFT regime and large s, and a
+# mesh narrows the race to the two distributed pipelines.
+GOLDEN = [
+    # (n,     s,    mesh_shape, clustered) -> variant
+    ((9997, 100, None, False), "KE"),     # paper Exp. 1 (MD/iMod)
+    ((9997, 100, None, True), "TT"),
+    ((17243, 448, None, False), "TT"),    # paper Exp. 2 (DFT/FLEUR)
+    ((17243, 448, None, True), "TT"),
+    ((512, 8, None, False), "TT"),
+    # few iterations at moderate n: skipping GS2 (KI) beats paying 2n^3
+    # to make the matvec cheaper (KE)
+    ((4096, 32, None, False), "KI"),
+    ((4096, 512, None, False), "TT"),     # s no longer << n
+    ((2048, 2000, None, False), "TT"),
+    ((128, 4, None, False), "TT"),
+    ((9997, 100, (4, 2), False), "KE"),
+    ((9997, 100, (4, 2), True), "TT"),
+    ((17243, 448, (4, 2), False), "TT"),
+    ((512, 8, (4, 2), False), "KE"),
+]
+
+
+@pytest.mark.parametrize("args,expected", GOLDEN,
+                         ids=[f"n{a[0]}_s{a[1]}_mesh{a[2]}_cl{a[3]}"
+                              for a, _ in GOLDEN])
+def test_golden_decision_table(args, expected):
+    n, s, mesh_shape, clustered = args
+    choice = choose_variant(n, s, mesh_shape=mesh_shape, clustered=clustered)
+    assert choice.variant == expected, choice.table
+
+
+def test_choice_invariants():
+    for (n, s, mesh_shape, clustered), _ in GOLDEN:
+        c = choose_variant(n, s, mesh_shape=mesh_shape, clustered=clustered)
+        allowed = (DISTRIBUTED_VARIANTS
+                   if mesh_shape and np.prod(mesh_shape) > 1 else VARIANTS)
+        assert set(c.table) == set(allowed)
+        assert c.variant in c.table
+        assert c.predicted_s == min(c.table.values())
+        # the decision payload must be JSON-clean (it rides in solve().info)
+        json.dumps(c.as_json_dict())
+
+
+def test_model_reflects_blas_levels():
+    """The structural claims behind the router: TD1 is memory-bound at any
+    bandwidth, TT1 turns compute-bound once the band is wide enough (the
+    arithmetic intensity of the trailing update grows with w — the paper
+    runs w=32), and TT does more flops than TD."""
+    mach = MachineParams()
+    n, s = 8192, 64
+    td = stage_costs("TD", n, s, machine=mach)
+    tt = stage_costs("TT", n, s, band_width=32, machine=mach)
+    assert tt["TT1"].flops > td["TD1"].flops
+    # roofline terms: TD1 time is set by bytes, TT1 (w=32) by flops
+    assert td["TD1"].bytes / mach.mem_bw > td["TD1"].flops / mach.peak_flops
+    assert tt["TT1"].bytes / mach.mem_bw < tt["TT1"].flops / mach.peak_flops
+    # intensity grows with w: halving the band doubles the byte traffic
+    tt8 = stage_costs("TT", n, s, band_width=8, machine=mach)
+    assert tt8["TT1"].bytes > tt["TT1"].bytes
+    # and the router's consequence: TT beats TD at either bandwidth
+    t_td = predict_stage_times("TD", n, s, machine=mach)["Tot."]
+    for w in (8, 32):
+        t_tt = predict_stage_times("TT", n, s, band_width=w,
+                                   machine=mach)["Tot."]
+        assert t_tt < t_td
+
+
+def test_iteration_estimate_monotone():
+    base = estimate_lanczos_iters(4096, 32)
+    clustered = estimate_lanczos_iters(4096, 32, clustered=True)
+    assert clustered > base
+    assert estimate_lanczos_iters(4096, 128) >= base
+
+
+def test_more_devices_never_slower():
+    for v in ("TT", "KE"):
+        t1 = predict_stage_times(v, 8192, 64, mesh_shape=(1, 1))["Tot."]
+        t8 = predict_stage_times(v, 8192, 64, mesh_shape=(4, 2))["Tot."]
+        assert t8 < t1
+
+
+# ------------------------------------------------------- auto dispatch ----
+
+AUTO_GRID = [(md_like, 64, 4, "smallest"), (md_like, 48, 3, "largest"),
+             (dft_like, 64, 4, "largest")]
+
+
+@pytest.mark.parametrize("gen,n,s,which", AUTO_GRID,
+                         ids=[f"{g.__name__}_n{n}_s{s}_{w}"
+                              for g, n, s, w in AUTO_GRID])
+def test_auto_matches_explicit(gen, n, s, which):
+    """variant='auto' never raises and returns the same eigenvalues as the
+    explicitly-chosen variant."""
+    prob = gen(n)
+    res_auto = solve(prob.A, prob.B, s, variant="auto", which=which)
+    picked = res_auto.info["variant"]
+    assert picked in VARIANTS
+    assert res_auto.info["router"]["variant"] == picked
+    res_explicit = solve(prob.A, prob.B, s, variant=picked, which=which)
+    np.testing.assert_allclose(np.asarray(res_auto.evals),
+                               np.asarray(res_explicit.evals),
+                               rtol=1e-12, atol=1e-12)
