@@ -1,0 +1,145 @@
+"""Eigenserve benchmark: batched serving engine vs a sequential `solve` loop.
+
+For each shape bucket, submits a fixed request stream twice:
+
+  * sequential — one ``core.gsyeig.solve`` call per pencil (the repo's only
+    serving mode before the engine existed), and
+  * engine     — the same pencils through ``serve.eigen_engine.EigenEngine``
+    (one vmapped ``solve_batched`` dispatch per full bucket).
+
+Both paths are warmed first so the comparison is steady-state serving
+throughput, not compile time. MD buckets exercise the paper's MD trick for
+the Krylov variant (``invert=True`` — the direct smallest end converges too
+slowly to serve, exactly as the accuracy harness documents).
+
+    PYTHONPATH=src python -m benchmarks.bench_eigenserve [--batch 8]
+
+Emits ``artifacts/BENCH_eigenserve.json``: per-bucket throughput for both
+modes and the speedup, plus the usual CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+
+def _problems(kind: str, n: int, batch: int):
+    from repro.data.problems import dft_like, md_like
+    gen = md_like if kind == "md" else dft_like
+    return [gen(n, key=jax.random.PRNGKey(1000 + i)) for i in range(batch)]
+
+
+def bench_bucket(kind: str, n: int, s: int, variant: str, batch: int,
+                 band_width: int, max_restarts: int, repeats: int) -> dict:
+    from repro.core import solve
+    from repro.serve.eigen_engine import EigenEngine
+
+    probs = _problems(kind, n, batch)
+    invert = kind == "md" and variant in ("KE", "KI")
+    kw = dict(variant=variant, which="smallest", invert=invert,
+              band_width=band_width, max_restarts=max_restarts)
+
+    def run_sequential():
+        out = [solve(p.A, p.B, s, **kw) for p in probs]
+        jax.block_until_ready(out[-1].evals)
+        return out
+
+    def run_engine():
+        eng = EigenEngine(slots=batch, bucket_shapes=[n], variant=variant,
+                          band_width=band_width, max_restarts=max_restarts)
+        for p in probs:
+            eng.submit(p.A, p.B, s, invert=invert)
+            eng.tick()
+        return eng.run_until_drained(flush=True)
+
+    # warm both paths (compile + populate the shape-bucket pipeline cache)
+    seq_out = run_sequential()
+    eng_out = run_engine()
+
+    # correctness gate: both modes must hit the generator's exact spectrum
+    seq_err = float(max(
+        np.max(np.abs(np.asarray(r.evals) - np.asarray(pr.exact_evals[:s])))
+        for r, pr in zip(seq_out, probs)))
+    eng_err = float(max(
+        np.max(np.abs(r.evals - np.asarray(pr.exact_evals[:s])))
+        for r, pr in zip(sorted(eng_out, key=lambda r: r.uid), probs)))
+    assert max(seq_err, eng_err) < 1e-6, \
+        f"{kind}/n{n}/{variant}: wrong spectrum (seq {seq_err:.2e}, " \
+        f"engine {eng_err:.2e}) — throughput numbers would be meaningless"
+
+    t_seq, t_eng = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_sequential()
+        t_seq.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_engine()
+        t_eng.append(time.perf_counter() - t0)
+    seq_s = sorted(t_seq)[len(t_seq) // 2]
+    eng_s = sorted(t_eng)[len(t_eng) // 2]
+
+    return {
+        "bucket": f"{kind}_n{n}_s{s}_{variant}",
+        "workload": kind, "n": n, "s": s, "variant": variant,
+        "batch": batch, "invert": invert,
+        "sequential_s": seq_s,
+        "sequential_problems_per_s": batch / seq_s,
+        "engine_s": eng_s,
+        "engine_problems_per_s": batch / eng_s,
+        "speedup": seq_s / eng_s,
+        "max_abs_eval_error_sequential": seq_err,
+        "max_abs_eval_error_engine": eng_err,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8,
+                    help="bucket seats = pencils per batched dispatch")
+    ap.add_argument("--s", type=int, default=4)
+    ap.add_argument("--band-width", type=int, default=4)
+    ap.add_argument("--max-restarts", type=int, default=200)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--outdir", default="artifacts")
+    args = ap.parse_args()
+
+    buckets = [
+        ("md", 48, "TD"),
+        ("md", 48, "KE"),
+        ("dft", 64, "TD"),
+    ]
+    recs = [bench_bucket(kind, n, args.s, variant, args.batch,
+                         args.band_width, args.max_restarts, args.repeats)
+            for kind, n, variant in buckets]
+
+    print("name,us_per_call,derived")
+    for r in recs:
+        print(f"bench_eigenserve_{r['bucket']},{r['engine_s'] * 1e6:.1f},"
+              f"seq={r['sequential_problems_per_s']:.1f}/s;"
+              f"engine={r['engine_problems_per_s']:.1f}/s;"
+              f"speedup={r['speedup']:.2f}x")
+
+    payload = {
+        "batch": args.batch,
+        "buckets": recs,
+        "any_bucket_faster": any(r["speedup"] > 1.0 for r in recs),
+    }
+    os.makedirs(args.outdir, exist_ok=True)
+    out = os.path.join(args.outdir, "BENCH_eigenserve.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out}")
+    assert payload["any_bucket_faster"], \
+        "batched engine did not beat the sequential loop on any bucket"
+
+
+if __name__ == "__main__":
+    main()

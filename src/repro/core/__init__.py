@@ -2,6 +2,7 @@
 contribution) as composable JAX modules."""
 from .back_transform import (back_transform_generalized,
                              forward_transform_generalized)
+from .batched import (BATCHED_VARIANTS, BatchedSolveResult, solve_batched)
 from .cholesky import cholesky_blocked, cholesky_upper
 from .gsyeig import VARIANTS, GSyEigResult, solve
 from .lanczos import (LanczosResult, default_subspace, lanczos_solve,
@@ -18,6 +19,7 @@ from .tridiag_eig import (bisect_eigenvalues, eigh_tridiag_selected,
 
 __all__ = [
     "solve", "VARIANTS", "GSyEigResult",
+    "solve_batched", "BATCHED_VARIANTS", "BatchedSolveResult",
     "cholesky_upper", "cholesky_blocked",
     "to_standard_two_trsm", "to_standard_sygst",
     "tridiagonalize", "tridiagonalize_blocked", "apply_q",

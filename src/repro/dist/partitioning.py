@@ -116,7 +116,8 @@ def _batch_dim_sharding(mesh, leaf, batch_axis: int) -> NamedSharding:
 def decode_state_shardings(mesh, state: Any) -> Any:
     """Shardings for a ``DecodeState``: scanned block caches carry a leading
     (R,) dim so their batch axis is 1; tail caches and enc-dec memory lead
-    with batch. The position scalar replicates."""
+    with batch. The (B,) per-slot position vector replicates (it is tiny
+    and every collective over it would cost more than the copy)."""
     block = jax.tree.map(lambda l: _batch_dim_sharding(mesh, l, 1),
                          state.block_caches)
     tails = jax.tree.map(lambda l: _batch_dim_sharding(mesh, l, 0),

@@ -28,7 +28,35 @@ def symv(A: jax.Array, x: jax.Array, block: int = 256,
     """
     n = A.shape[0]
     interpret = (not _on_tpu()) if force_interpret is None else force_interpret
-    block = min(block, max(8, 1 << (n - 1).bit_length()))
+    # clamp the pad target to (roughly) the granularity ceiling of n — NOT
+    # the old next-power-of-two clamp, which padded e.g. n=300 to 512x512
+    # (~70% wasted flops/bytes per matvec). The block must be a multiple of
+    # the tile granularity g: 8 sublanes in interpret mode, 128 lanes on a
+    # real TPU (kernel.py's (8, 128) MXU tiling). The two modes want
+    # opposite objectives:
+    #  * interpret: every tile is a Python-level kernel call, so keep the
+    #    grid as coarse as the requested block allows (nb tiles) and round
+    #    the per-tile size up to g — waste <= g*nb rows. n=300 -> 2 tiles
+    #    of 152, 304 padded.
+    #  * compiled: grid steps are cheap, padded bytes are the cost — pick
+    #    the g-multiple block (<= requested) minimizing the padded size,
+    #    ties to the larger block. n=300 -> 3 tiles of 128, 384 padded.
+    # (The other wrappers pad to fixed 128-tiles (gemm, syr2k), a divisor
+    # of n (band_mv), or min(block, n) (trsm).)
+    g = 8 if interpret else 128
+    if interpret:
+        nb = -(-n // max(g, block))
+        per = -(-n // nb)
+        block = max(g, -(-per // g) * g)
+    else:
+        k_max = max(1, min(block, -(-n // g) * g) // g)
+        best_block, best_padded = g, -(-n // g) * g
+        for k in range(2, k_max + 1):
+            b = g * k
+            padded = -(-n // b) * b
+            if padded <= best_padded:  # ties -> larger block
+                best_block, best_padded = b, padded
+        block = best_block
     pad = (-n) % block
     if pad:
         A = jnp.pad(A, ((0, pad), (0, pad)))

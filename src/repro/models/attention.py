@@ -181,46 +181,47 @@ def attention_decode(p: Params, x: jax.Array, cache: LayerKVCache,
                      pos: jax.Array, cfg: ModelConfig,
                      window: Optional[int] = None
                      ) -> tuple[jax.Array, LayerKVCache]:
-    """One-token decode: x (B, 1, D), pos scalar int32 (current index).
+    """One-token decode: x (B, 1, D), pos (B,) int32 per-batch-slot current
+    index (a scalar broadcasts — every slot at the same position).
 
     The cache is a ring buffer of length W (= full seq for global layers,
-    sliding window for local layers): slot = pos % W.
+    sliding window for local layers): slot_b = pos_b % W. Positions are
+    per batch element so a continuous-batching engine can run each slot's
+    request from its own position 0 — the validity mask below then hides
+    whatever a previous occupant left in the ring.
     """
     B = x.shape[0]
     hd = cfg.head_dim
     groups = cfg.n_heads // cfg.n_kv_heads
     W = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
     q = _split_heads(linear(p["q"], x, cfg), cfg.n_heads, hd)    # (B,1,H,hd)
     k = _split_heads(linear(p["k"], x, cfg), cfg.n_kv_heads, hd)
     v = _split_heads(linear(p["v"], x, cfg), cfg.n_kv_heads, hd)
-    cos, sin = rope_angles(pos[None, None], hd, cfg.rope_theta)
+    cos, sin = rope_angles(pos[:, None], hd, cfg.rope_theta)  # (B,1,hd/2)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    slot = jnp.mod(pos, W).astype(jnp.int32)
-    zero = jnp.zeros((), jnp.int32)
+    slot = jnp.mod(pos, W).astype(jnp.int32)                  # (B,)
+    rows = jnp.arange(B)
     quant = cache.k.dtype == jnp.int8
     if quant:
         kq, ks_new = _quantize_kv(k)
         vq, vs_new = _quantize_kv(v)
-        ck = jax.lax.dynamic_update_slice(cache.k, kq, (zero, slot, zero,
-                                                        zero))
-        cv = jax.lax.dynamic_update_slice(cache.v, vq, (zero, slot, zero,
-                                                        zero))
-        kscale = jax.lax.dynamic_update_slice(cache.k_scale, ks_new,
-                                              (zero, slot, zero))
-        vscale = jax.lax.dynamic_update_slice(cache.v_scale, vs_new,
-                                              (zero, slot, zero))
+        ck = cache.k.at[rows, slot].set(kq[:, 0])
+        cv = cache.v.at[rows, slot].set(vq[:, 0])
+        kscale = cache.k_scale.at[rows, slot].set(ks_new[:, 0])
+        vscale = cache.v_scale.at[rows, slot].set(vs_new[:, 0])
     else:
-        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
-                                          (zero, slot, zero, zero))
-        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
-                                          (zero, slot, zero, zero))
+        ck = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
         kscale, vscale = cache.k_scale, cache.v_scale
-    # valid slots: ring indices holding positions in (pos-W, pos]
+    # valid slots: ring indices holding positions in (pos-W, pos], per batch
     idx = jnp.arange(W)
     # absolute position stored in ring slot i (given current write at `slot`)
-    age = jnp.mod(slot - idx, W)            # 0 = newest
-    valid = age <= jnp.minimum(pos, W - 1)
+    age = jnp.mod(slot[:, None] - idx[None, :], W)            # (B,W) 0=newest
+    valid = age <= jnp.minimum(pos, W - 1)[:, None]
     if window is not None:
         valid = valid & (age < window)
     if quant:
@@ -234,7 +235,7 @@ def attention_decode(p: Params, x: jax.Array, cache: LayerKVCache,
     if cfg.attn_logit_softcap:
         c = cfg.attn_logit_softcap
         logits = c * jnp.tanh(logits / c)
-    logits = jnp.where(valid[None, None, None, :], logits,
+    logits = jnp.where(valid[:, None, None, :], logits,
                        jnp.finfo(jnp.float32).min)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhst,bthd->bshd", probs, vv)

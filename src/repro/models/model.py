@@ -214,7 +214,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
 class DecodeState(NamedTuple):
     block_caches: Tuple[Any, ...]   # per period position, leaves stacked (R,)
     tail_caches: Tuple[Any, ...]
-    pos: jax.Array                  # scalar int32: next position to write
+    pos: jax.Array                  # (B,) int32: next position PER batch slot
     memory: Optional[jax.Array] = None  # enc-dec cross-attention memory
 
 
@@ -243,7 +243,48 @@ def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
     tails = tuple(_kind_cache(cfg, kinds[P * R + t], batch, capacity)
                   for t in range(tail))
     return DecodeState(block_caches=tuple(blocks), tail_caches=tails,
-                       pos=jnp.zeros((), jnp.int32), memory=memory)
+                       pos=jnp.zeros((batch,), jnp.int32), memory=memory)
+
+
+def reset_decode_slot(cfg: ModelConfig, state: DecodeState, slot,
+                      capacity: int) -> DecodeState:
+    """Re-initialize batch slot ``slot`` of a ``DecodeState`` for a fresh
+    request: position back to 0 and every per-slot row of every cache /
+    recurrent state restored to its init value (zero KV rows, unit
+    quantization scales, zero mamba/xlstm states).
+
+    This is the admission-time reset a continuous-batching engine needs:
+    without it a request admitted into a freed slot inherits the previous
+    occupant's position and cached keys/values. ``slot`` may be a traced
+    int32 scalar, so the whole reset jits to one program (jit it with
+    ``donate_argnums=(0,)`` so the state is rewritten in place rather than
+    copied per admission — see ``serve.engine.ServeEngine``).
+    """
+    fresh = init_decode_state(cfg, 1, capacity=capacity)
+
+    def _write_row(batch_axis):
+        def write(full, one):
+            start = [jnp.zeros((), jnp.int32)] * full.ndim
+            start[batch_axis] = jnp.asarray(slot, jnp.int32)
+            return jax.lax.dynamic_update_slice(
+                full, one.astype(full.dtype), tuple(start))
+        return write
+
+    # scanned block caches lead with (R,), so batch is axis 1; tail caches
+    # lead with batch
+    blocks = jax.tree.map(_write_row(1), state.block_caches,
+                          fresh.block_caches)
+    tails = jax.tree.map(_write_row(0), state.tail_caches,
+                         fresh.tail_caches)
+    pos = state.pos.at[slot].set(0)
+    memory = state.memory
+    if memory is not None:
+        # zero the slot's cross-attention memory too — stale encoder output
+        # is the same leak class as stale KV. An enc-dec engine must install
+        # the NEW request's encoder memory into this row after the reset.
+        memory = _write_row(0)(memory, jnp.zeros_like(memory[:1]))
+    return DecodeState(block_caches=blocks, tail_caches=tails, pos=pos,
+                       memory=memory)
 
 
 def _layer_dec(p: Params, x: jax.Array, cache, pos, cfg: ModelConfig,

@@ -1,0 +1,247 @@
+"""Eigensolver serving engine: shape-bucketed continuous batching for
+sequences of dense generalized eigenproblems.
+
+The same slot-based scheme ``serve.engine.ServeEngine`` uses for token
+decoding, transposed to the paper's workload: MD / DFT drivers emit one
+``(A, B, s)`` pencil per timestep / SCF iteration, almost always at a small
+set of recurring shapes. The engine
+
+  * admits requests into *shape buckets* keyed on
+    ``(n, s, which, invert, variant)`` — each bucket has ``slots`` seats,
+  * dispatches a full bucket as ONE vmapped program through
+    ``core.batched.solve_batched`` (the compiled pipeline is reused from the
+    shape-bucket jit cache across dispatches),
+  * routes oversized or mesh-worthy requests through the existing
+    ``variant='auto'`` cost-model router in ``core.gsyeig.solve`` (with the
+    engine's device mesh, if any),
+  * retires every request with per-request latency + dispatch metadata in
+    ``req.info``.
+
+``run_until_drained(flush=True)`` flushes partially-filled buckets at the
+end of a stream, so a bucket never strands requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched import BATCHED_VARIANTS, solve_batched
+from repro.core.gsyeig import solve
+
+BucketKey = Tuple[int, int, str, bool, str]  # (n, s, which, invert, variant)
+
+
+@dataclasses.dataclass
+class EigenRequest:
+    uid: int
+    A: Optional[jax.Array]   # released (None) at retirement — a continuously
+    B: Optional[jax.Array]   # fed engine must not retain every operand
+    s: int
+    which: str = "smallest"
+    invert: bool = False
+    variant: str = "TD"
+    # filled by the engine:
+    evals: Optional[np.ndarray] = None
+    X: Optional[np.ndarray] = None
+    info: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+class EigenEngine:
+    """Synchronous bucketed batching engine for GSYEIG requests.
+
+    Parameters
+    ----------
+    slots : seats per shape bucket; a bucket dispatches as soon as it fills.
+    bucket_shapes : admissible ``n`` values for batched service; requests at
+        any other ``n`` fall through to the direct (router) path. ``None``
+        admits every shape below ``max_batched_n`` to batching.
+    max_batched_n : problems larger than this always go through the
+        ``variant='auto'`` router (optionally onto ``mesh``) — batching a
+        handful of huge pencils would thrash memory for no dispatch win.
+    mesh : optional ``jax.sharding.Mesh`` handed to the router path.
+    """
+
+    def __init__(self, slots: int = 4,
+                 bucket_shapes: Optional[List[int]] = None,
+                 variant: str = "TD",
+                 max_batched_n: int = 1024,
+                 mesh=None,
+                 band_width: int = 8,
+                 m: int | None = None,
+                 max_restarts: int = 200,
+                 key: jax.Array | None = None):
+        assert slots >= 1
+        assert variant in BATCHED_VARIANTS, variant
+        self.slots = slots
+        self.bucket_shapes = (None if bucket_shapes is None
+                              else sorted(set(int(n) for n in bucket_shapes)))
+        self.default_variant = variant
+        self.max_batched_n = max_batched_n
+        self.mesh = mesh
+        self.band_width = band_width
+        self.m = m
+        self.max_restarts = max_restarts
+        self._key = key if key is not None else jax.random.PRNGKey(1729)
+        self.buckets: "OrderedDict[BucketKey, List[EigenRequest]]" = \
+            OrderedDict()
+        self.direct_queue: List[EigenRequest] = []
+        self.done: List[EigenRequest] = []
+        self._uid = 0
+        self.n_dispatches = 0
+
+    # -------------------------------------------------------------- admit --
+    def _batchable(self, n: int, variant: Optional[str]) -> bool:
+        if variant is not None and variant not in BATCHED_VARIANTS:
+            return False  # e.g. an explicit 'auto' request
+        if n > self.max_batched_n:
+            return False
+        if self.bucket_shapes is not None and n not in self.bucket_shapes:
+            return False
+        return True
+
+    def submit(self, A, B, s: int, which: str = "smallest",
+               invert: bool = False, variant: Optional[str] = None) -> int:
+        """Queue one pencil; returns its uid. ``variant=None`` uses the
+        engine default for batchable requests; ``variant='auto'`` forces the
+        cost-model router path."""
+        A = jnp.asarray(A)
+        B = jnp.asarray(B)
+        n = A.shape[0]
+        assert A.shape == (n, n) and B.shape == (n, n), (A.shape, B.shape)
+        self._uid += 1
+        batchable = self._batchable(n, variant)
+        v = (variant if variant is not None
+             else (self.default_variant if batchable else "auto"))
+        req = EigenRequest(uid=self._uid, A=A, B=B, s=int(s), which=which,
+                           invert=invert, variant=v,
+                           submitted_at=time.perf_counter())
+        if batchable:
+            bkey: BucketKey = (n, int(s), which, bool(invert), v)
+            self.buckets.setdefault(bkey, []).append(req)
+        else:
+            self.direct_queue.append(req)
+        return req.uid
+
+    # ----------------------------------------------------------- dispatch --
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _dispatch_bucket(self, bkey: BucketKey,
+                         reqs: List[EigenRequest]) -> None:
+        n, s, which, invert, variant = bkey
+        A = jnp.stack([r.A for r in reqs])
+        B = jnp.stack([r.B for r in reqs])
+        res = solve_batched(A, B, s, variant=variant, which=which,
+                            invert=invert, band_width=self.band_width,
+                            m=self.m, max_restarts=self.max_restarts,
+                            key=self._next_key())
+        self.n_dispatches += 1
+        now = time.perf_counter()
+        evals = np.asarray(res.evals)
+        X = np.asarray(res.X)
+        conv = np.asarray(res.converged)
+        for i, req in enumerate(reqs):
+            req.evals, req.X = evals[i], X[i]
+            req.A = req.B = None  # free the operands; results stay
+            req.finished_at = now
+            req.info = {"path": "batched", "bucket": list(bkey),
+                        "batch": len(reqs), "variant": variant,
+                        "converged": bool(conv[i]),
+                        "dispatch_wall_s": res.info["wall_s"],
+                        "latency_s": req.finished_at - req.submitted_at}
+            self.done.append(req)
+
+    def _dispatch_direct(self, req: EigenRequest) -> None:
+        # core.solve's mesh= dispatch implements KE/TT (and 'auto' restricts
+        # itself to those); a direct TD/KI request runs on one device
+        mesh = self.mesh if req.variant in ("KE", "TT", "auto") else None
+        res = solve(req.A, req.B, req.s, variant=req.variant,
+                    which=req.which, invert=req.invert,
+                    band_width=self.band_width, m=self.m,
+                    max_restarts=self.max_restarts, mesh=mesh,
+                    key=self._next_key())
+        self.n_dispatches += 1
+        req.evals = np.asarray(res.evals)
+        req.X = np.asarray(res.X)
+        req.A = req.B = None  # free the operands; results stay
+        req.finished_at = time.perf_counter()
+        req.info = {"path": "direct", "variant": res.info["variant"],
+                    "stage_times": res.stage_times,
+                    "latency_s": req.finished_at - req.submitted_at}
+        if "router" in res.info:
+            req.info["router"] = res.info["router"]
+        self.done.append(req)
+
+    # --------------------------------------------------------------- tick --
+    def tick(self, flush: bool = False) -> int:
+        """Dispatch every full bucket (plus partial buckets when ``flush``)
+        and one direct request; returns the number of retired requests."""
+        retired0 = len(self.done)
+        for bkey in list(self.buckets):
+            pending = self.buckets[bkey]
+            while len(pending) >= self.slots:
+                batch, self.buckets[bkey] = pending[:self.slots], \
+                    pending[self.slots:]
+                pending = self.buckets[bkey]
+                self._dispatch_bucket(bkey, batch)
+            if flush and pending:
+                self.buckets[bkey] = []
+                self._dispatch_bucket(bkey, pending)
+            if not self.buckets[bkey]:
+                del self.buckets[bkey]
+        if self.direct_queue:
+            self._dispatch_direct(self.direct_queue.pop(0))
+        return len(self.done) - retired0
+
+    def pending(self) -> int:
+        return (sum(len(v) for v in self.buckets.values())
+                + len(self.direct_queue))
+
+    def run_until_drained(self, flush: bool = True,
+                          max_ticks: int = 10_000) -> List[EigenRequest]:
+        for _ in range(max_ticks):
+            if not self.pending():
+                break
+            if self.tick(flush=flush) == 0 and not flush:
+                # nothing retired and nothing may dispatch without a flush:
+                # only partial buckets remain, so stop instead of spinning
+                break
+        return self.done
+
+    # ------------------------------------------------------------ metrics --
+    def summary(self) -> Dict[str, Any]:
+        """JSON-clean per-bucket serving metrics for the CLI / benchmark."""
+        per_bucket: Dict[str, Dict[str, Any]] = {}
+        for req in self.done:
+            if req.info.get("path") == "batched":
+                n, s, which, invert, variant = req.info["bucket"]
+                name = f"n{n}_s{s}_{which}_{variant}" + \
+                    ("_inv" if invert else "")
+            else:
+                name = "direct"
+            b = per_bucket.setdefault(name, {"count": 0, "latency_s": []})
+            b["count"] += 1
+            b["latency_s"].append(req.info["latency_s"])
+        for b in per_bucket.values():
+            lat = b.pop("latency_s")
+            b["mean_latency_s"] = float(np.mean(lat))
+            b["p90_latency_s"] = float(np.percentile(lat, 90))
+        return {"requests": len(self.done),
+                "dispatches": self.n_dispatches,
+                "buckets": per_bucket}
+
+
+__all__ = ["EigenEngine", "EigenRequest"]

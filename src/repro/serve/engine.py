@@ -6,6 +6,14 @@ interleaves safely because every cache row is per-batch-element), and
 retires sequences on EOS/length. This is the standard slot-based continuous
 batching scheme (vLLM-style, ring-buffer caches instead of paged blocks —
 the paged refinement drops into LayerKVCache without touching the engine).
+
+Per-slot state semantics: ``DecodeState.pos`` is a (B,) vector — each slot
+decodes from its own position — and admission resets the admitted slot's
+row of every cache / recurrent state (``models.model.reset_decode_slot``).
+A request admitted into a freed slot mid-stream therefore reproduces its
+solo-run output token-for-token; it can neither write at the long-running
+occupant's position nor attend to the previous occupant's cached
+keys/values (the regression test in tests/test_serve_engine.py pins this).
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.model import init_decode_state
+from repro.models.model import init_decode_state, reset_decode_slot
 from repro.train.train_step import make_serve_step
 
 
@@ -56,6 +64,11 @@ class ServeEngine:
         self.B = batch_slots
         self.capacity = capacity
         self._step = jax.jit(make_serve_step(cfg))
+        # donate the state: the reset rewrites one slot's rows in place
+        # instead of copying every layer's caches per admission
+        self._reset_slot = jax.jit(
+            lambda state, i: reset_decode_slot(cfg, state, i, capacity),
+            donate_argnums=(0,))
         self.state = init_decode_state(cfg, batch_slots, capacity=capacity)
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: Deque[Request] = deque()
@@ -74,11 +87,23 @@ class ServeEngine:
         return req.uid
 
     def _admit(self) -> None:
-        for slot in self.slots:
+        for i, slot in enumerate(self.slots):
             if slot.free and self.queue:
                 slot.req = self.queue.popleft()
                 slot.produced = 0
                 slot.prompt_cursor = 0
+                # fresh request, fresh slot: zero the slot's position and
+                # every cache row so nothing of the previous occupant leaks.
+                # Unconditional on purpose — even a never-occupied free slot
+                # is dirty by admission time, because free slots still tick
+                # (their pos advances and token-0 rows land in their caches).
+                # The jitted reset donates the state, so this is a row
+                # rewrite, not a full-state copy.
+                self.state = self._reset_slot(self.state,
+                                              jnp.asarray(i, jnp.int32))
+                # and the host-side token buffer: a zero-length prompt would
+                # otherwise feed the previous occupant's last sampled token
+                self._tokens[i, 0] = 0
 
     # --------------------------------------------------------------- tick --
     def tick(self) -> int:

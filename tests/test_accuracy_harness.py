@@ -16,7 +16,9 @@ import pytest
 from repro.core import VARIANTS, accuracy_report, solve
 from repro.data.problems import dft_like, md_like
 
-N, S = 96, 6
+# n shrunk from 96 (same spectra, same tolerances — the metrics are
+# n-relative) to keep the 16-cell sweep inside the CI fast-lane budget
+N, S = 64, 6
 
 # the single shared Table-3 tolerance table — every cell below must meet it
 TABLE3_TOLERANCES = {
@@ -27,9 +29,23 @@ TABLE3_TOLERANCES = {
 PROBLEMS = {"md_like": md_like, "dft_like": dft_like}
 
 
-@pytest.mark.parametrize("variant", VARIANTS)
-@pytest.mark.parametrize("problem", sorted(PROBLEMS))
-@pytest.mark.parametrize("which", ["smallest", "largest"])
+def _heavy(variant, problem, which):
+    """The clustered DFT low end is the paper's slow-Lanczos regime (Exp. 2's
+    thousands of iterations): the Krylov cells there dominate the fast lane,
+    so they run nightly behind the `slow` marker. Direct variants and every
+    other spectrum end stay in the fast lane."""
+    return (problem == "dft_like" and which == "smallest"
+            and variant in ("KE", "KI"))
+
+
+CELLS = [pytest.param(v, p, w,
+                      marks=(pytest.mark.slow,) if _heavy(v, p, w) else (),
+                      id=f"{w}-{p}-{v}")
+         for v in VARIANTS for p in sorted(PROBLEMS)
+         for w in ("smallest", "largest")]
+
+
+@pytest.mark.parametrize("variant,problem,which", CELLS)
 def test_table3_metrics(variant, problem, which):
     prob = PROBLEMS[problem](N)
     # the paper's MD methodology, not a tolerance tweak: Krylov variants

@@ -48,7 +48,15 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(aux)), f"{arch}: non-finite moe aux"
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# jamba's train-step smoke (mamba grads through the longest scan period) is
+# the single heaviest arch cell (~30s); forward + decode coverage for it
+# stays in the fast lane, the train step runs nightly
+_TRAIN_ARCHS = [pytest.param(a, marks=(pytest.mark.slow,)
+                             if a == "jamba-1.5-large-398b" else ())
+                for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _TRAIN_ARCHS)
 def test_train_step(arch):
     cfg = smoke_config(arch)
     key = jax.random.PRNGKey(1)
@@ -84,10 +92,11 @@ def test_decode_step(arch):
     logits, state = serve(params, toks, state)
     assert logits.shape == (B, 1, cfg.vocab_size)
     assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite decode"
-    assert int(state.pos) == 1
+    assert state.pos.shape == (B,)  # per-slot positions (continuous batching)
+    assert [int(p) for p in state.pos] == [1] * B
     # a second step advances the cache
     logits2, state = serve(params, toks, state)
-    assert int(state.pos) == 2
+    assert [int(p) for p in state.pos] == [2] * B
     assert bool(jnp.isfinite(logits2).all())
 
 

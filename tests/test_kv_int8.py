@@ -18,10 +18,13 @@ def test_int8_kv_decode_close_to_f32():
     st_f = init_decode_state(cfg, B, capacity=16)
     st_q = init_decode_state(cfg8, B, capacity=16)
     assert st_q.block_caches[0].k.dtype == jnp.int8
+    # jitted steps: one compile per cache dtype instead of 2T eager traces
+    step_f = jax.jit(lambda p, t, s: decode_step(p, t, s, cfg))
+    step_q = jax.jit(lambda p, t, s: decode_step(p, t, s, cfg8))
     outs_f, outs_q = [], []
     for t in range(T):
-        lf, st_f = decode_step(params, toks[:, t:t + 1], st_f, cfg)
-        lq, st_q = decode_step(params, toks[:, t:t + 1], st_q, cfg8)
+        lf, st_f = step_f(params, toks[:, t:t + 1], st_f)
+        lq, st_q = step_q(params, toks[:, t:t + 1], st_q)
         outs_f.append(lf)
         outs_q.append(lq)
     lf = jnp.concatenate(outs_f, axis=1)

@@ -43,6 +43,42 @@ def test_engine_continuous_batching_overlaps():
     assert order.index(third_uid) < order.index(long_uid)
 
 
+def test_staggered_admits_match_solo_runs():
+    """Regression for the slot-reuse state leak: a request admitted into a
+    freed slot mid-stream of another request must reproduce its solo-run
+    output token-for-token. Before per-slot positions + admission-time
+    cache reset, the new occupant started writing at the long-running
+    request's position and attended to the previous occupant's cached
+    keys/values."""
+    cfg, eng = _engine(slots=2)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=4) for _ in range(3)]
+    lens = [16, 3, 3]
+
+    def solo(prompt, n_new):
+        e = ServeEngine(cfg, eng.params, batch_slots=2, capacity=64)
+        uid = e.submit(prompt, max_new_tokens=n_new)
+        (r,) = e.run_until_drained()
+        assert r.uid == uid
+        return r.output
+
+    expect = [solo(p, n) for p, n in zip(prompts, lens)]
+
+    uid0 = eng.submit(prompts[0], max_new_tokens=lens[0])  # long occupant
+    uid1 = eng.submit(prompts[1], max_new_tokens=lens[1])
+    for _ in range(100):
+        eng.tick()
+        if any(r.uid == uid1 for r in eng.done):
+            break
+    # slot freed mid-stream of the long request: admit the third request
+    # into it while the long request keeps decoding
+    uid2 = eng.submit(prompts[2], max_new_tokens=lens[2])
+    out = {r.uid: r.output for r in eng.run_until_drained()}
+    assert out[uid1] == expect[1]
+    assert out[uid2] == expect[2], "freed-slot re-admit diverged from solo"
+    assert out[uid0] == expect[0], "long-running occupant was disturbed"
+
+
 def test_engine_eos_stops_early():
     cfg, eng = _engine(slots=1)
     rng = np.random.default_rng(2)
