@@ -1,0 +1,165 @@
+"""TT2 storage shootout: dense-storage bulge chase vs the packed wavefront.
+
+Measures, per (n, w):
+
+  * TT2 dense   — ``band_to_tridiag_dense`` (the old one-rotation-per-
+    dispatch implementation on full (n, n) storage, full explicit Q)
+  * TT2 band    — ``band_chase`` + ``accumulate_q2`` (packed (w+1, n)
+    storage, wavefront-batched rotations, blocked Q2 replay) — the
+    apples-to-apples explicit-Q comparison
+  * TT2 chase / TT4 replay — the production split: chase only, then the
+    rotation stream replayed over an (n, s) Ritz slab (``apply_q2``)
+  * TT1 full / TT1 window  — old full-(n, n) masked panel updates
+    (``n_chunks=1``) vs the shrinking trailing-window ladder
+  * old/new full TT — (TT1 full + TT2 dense) vs (TT1 window + chase+replay)
+
+Standalone:
+
+    PYTHONPATH=src python -m benchmarks.bench_sbr [--quick]
+
+``--quick`` runs the single CI gate cell (n=256, w=8) and EXITS NONZERO if
+the band-storage TT2 is not faster than the dense-storage chase — the
+nightly guard against a silent fallback regression. The full sweep
+(n in {128, 256, 512} x w in {8, 32}) emits ``artifacts/BENCH_sbr.json``
+and the usual ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def _median_time(fn, *args, repeats: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)       # warmup/compile
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        walls.append(time.perf_counter() - t0)
+    return sorted(walls)[len(walls) // 2], out
+
+
+def bench_cell(n: int, w: int, s: int, repeats: int, dense_repeats: int):
+    from repro.core.band_storage import unpack_band
+    from repro.core.sbr import (accumulate_q2, apply_q2, band_chase,
+                                band_to_tridiag_dense, reduce_to_band)
+
+    key = jax.random.PRNGKey(1111 * n + w)
+    M = jax.random.normal(key, (n, n), jnp.float64)
+    C = 0.5 * (M + M.T)
+    Z = jax.random.normal(jax.random.fold_in(key, 1), (n, s), jnp.float64)
+
+    t_tt1_win, band = _median_time(
+        lambda c: reduce_to_band(c, w=w), C, repeats=repeats)
+    t_tt1_full, _ = _median_time(
+        lambda c: reduce_to_band(c, w=w, n_chunks=1), C, repeats=repeats)
+
+    Wd = unpack_band(band.Wb)
+    t_dense, ref = _median_time(
+        lambda wd, q: band_to_tridiag_dense(wd, q, w), Wd, band.Q1,
+        repeats=dense_repeats)
+
+    t_chase, chase = _median_time(
+        lambda wb: band_chase(wb, w), band.Wb, repeats=repeats)
+    t_accum, Qfull = _median_time(
+        lambda ch, q: accumulate_q2(ch, q, w), chase, band.Q1,
+        repeats=repeats)
+    t_apply, _ = _median_time(
+        lambda ch, z: apply_q2(ch, z, w), chase, Z, repeats=repeats)
+
+    # sanity: the packed chase must reproduce the dense reference
+    err_d = float(jnp.max(jnp.abs(ref.d - chase.d)))
+    err_q = float(jnp.max(jnp.abs(ref.Q - Qfull)))
+    scale = float(jnp.max(jnp.abs(chase.d))) + 1.0
+    assert err_d <= 1e-9 * scale and err_q <= 1e-9, (n, w, err_d, err_q)
+
+    t_band_fullq = t_chase + t_accum
+    t_band_replay = t_chase + t_apply
+    return {
+        "n": n, "w": w, "s": s,
+        "tt1_full_s": t_tt1_full, "tt1_window_s": t_tt1_win,
+        "tt2_dense_s": t_dense,
+        "tt2_band_fullq_s": t_band_fullq,
+        "tt2_chase_s": t_chase, "tt4_replay_s": t_apply,
+        "old_tt_s": t_tt1_full + t_dense,
+        "new_tt_s": t_tt1_win + t_band_replay,
+        "speedup_tt2_fullq": t_dense / t_band_fullq,
+        "speedup_tt2_replay": t_dense / t_band_replay,
+        "speedup_tt1": t_tt1_full / t_tt1_win,
+        "speedup_full_tt": (t_tt1_full + t_dense) / (t_tt1_win
+                                                     + t_band_replay),
+        "max_abs_d_err_vs_dense": err_d,
+        "max_abs_q_err_vs_dense": err_q,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI gate: n=256/w=8 only; fail if band TT2 is not "
+                         "faster than the dense chase")
+    ap.add_argument("--ns", type=int, nargs="*", default=[128, 256, 512])
+    ap.add_argument("--ws", type=int, nargs="*", default=[8, 32])
+    ap.add_argument("--s", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--outdir", default="artifacts")
+    args = ap.parse_args()
+
+    if args.quick:
+        cells = [(256, 8)]
+        repeats = 1
+    else:
+        cells = [(n, w) for n in args.ns for w in args.ws]
+        repeats = args.repeats
+
+    out = {"s": args.s, "cells": []}
+    print("name,us_per_call,derived")
+    for n, w in cells:
+        # the dense chase is the slow baseline; one repeat is plenty at 512
+        dense_repeats = 1 if n >= 512 else repeats
+        cell = bench_cell(n, w, args.s, repeats, dense_repeats)
+        out["cells"].append(cell)
+        print(f"bench_sbr_tt2_dense_n{n}_w{w},{cell['tt2_dense_s']*1e6:.1f},")
+        print(f"bench_sbr_tt2_band_n{n}_w{w},"
+              f"{cell['tt2_band_fullq_s']*1e6:.1f},"
+              f"speedup={cell['speedup_tt2_fullq']:.1f}x")
+        print(f"bench_sbr_tt2_chase_replay_n{n}_w{w},"
+              f"{(cell['tt2_chase_s']+cell['tt4_replay_s'])*1e6:.1f},"
+              f"speedup={cell['speedup_tt2_replay']:.1f}x")
+        print(f"bench_sbr_full_tt_n{n}_w{w},{cell['new_tt_s']*1e6:.1f},"
+              f"old={cell['old_tt_s']*1e6:.1f}us;"
+              f"speedup={cell['speedup_full_tt']:.1f}x")
+
+    if args.quick:
+        cell = out["cells"][0]
+        ok = (cell["tt2_band_fullq_s"] < cell["tt2_dense_s"]
+              and cell["tt2_chase_s"] + cell["tt4_replay_s"]
+              < cell["tt2_dense_s"])
+        print(f"bench_sbr_quick_gate,0.0,band_faster={ok}")
+        if not ok:
+            print("FAIL: band-storage TT2 is not faster than the "
+                  "dense-storage chase at n=256", file=sys.stderr)
+            return 1
+        return 0
+
+    os.makedirs(args.outdir, exist_ok=True)
+    path = os.path.join(args.outdir, "BENCH_sbr.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

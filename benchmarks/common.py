@@ -12,11 +12,10 @@ MD_N, MD_S = 384, 4          # ~1% of the spectrum, as in the paper's MD
 DFT_N, DFT_S = 512, 13       # ~2.6%, as in the paper's DFT
 
 BAND_W = 8                   # TT bandwidth at CI scale (paper used 32 at 17k)
-# NOTE on scale: variant TT's band->tridiagonal Givens chase hits an XLA-CPU
-# while-loop buffer-copy pathology (O(n^2) per rotation on CPU; the TPU
-# answer is a band-storage Pallas kernel, see DESIGN.md). n is sized so the
-# whole table runs in minutes while preserving the paper's ordering —
-# including its own headline TT finding: TT2 dominates TT and TT loses.
+# NOTE on scale: TT2 used to dominate these tables through a dense-storage
+# one-rotation-per-dispatch chase; it now runs as the packed-band wavefront
+# chase (core/sbr.py + kernels/rot_apply, see benchmarks/bench_sbr.py for
+# the dense-vs-band shootout), so n is sized only by the O(n^3) stages.
 
 
 @lru_cache(maxsize=None)

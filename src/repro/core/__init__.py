@@ -2,6 +2,8 @@
 contribution) as composable JAX modules."""
 from .back_transform import (back_transform_generalized,
                              forward_transform_generalized)
+from .band_storage import (band_extract_tridiag, clean_band, pack_band,
+                           unpack_band)
 from .batched import (BATCHED_VARIANTS, BatchedSolveResult, solve_batched)
 from .cholesky import cholesky_blocked, cholesky_upper
 from .gsyeig import VARIANTS, GSyEigResult, solve
@@ -10,7 +12,9 @@ from .lanczos import (LanczosResult, default_subspace, lanczos_solve,
 from .operators import ExplicitC, ImplicitC, apply_op
 from .residuals import (AccuracyReport, accuracy_report, b_normalize,
                         b_orthogonality, relative_residual)
-from .sbr import band_to_tridiag, reduce_to_band, two_stage_tridiagonalize
+from .sbr import (accumulate_q2, apply_q2, band_chase, band_to_tridiag,
+                  band_to_tridiag_dense, reduce_to_band,
+                  two_stage_tridiagonalize)
 from .standard_form import to_standard_sygst, to_standard_two_trsm
 from .tridiag import (TridiagResult, apply_q, apply_qt,
                       tridiagonalize, tridiagonalize_blocked)
@@ -24,7 +28,9 @@ __all__ = [
     "to_standard_two_trsm", "to_standard_sygst",
     "tridiagonalize", "tridiagonalize_blocked", "apply_q",
     "apply_qt", "TridiagResult",
-    "reduce_to_band", "band_to_tridiag", "two_stage_tridiagonalize",
+    "reduce_to_band", "band_to_tridiag", "band_to_tridiag_dense",
+    "band_chase", "apply_q2", "accumulate_q2", "two_stage_tridiagonalize",
+    "pack_band", "unpack_band", "clean_band", "band_extract_tridiag",
     "sturm_count", "sturm_counts", "bisect_eigenvalues",
     "inverse_iteration", "eigh_tridiag_selected",
     "lanczos_solve", "lanczos_solve_jit", "LanczosResult", "default_subspace",

@@ -1,0 +1,88 @@
+"""Compact symmetric band storage (LAPACK lower 'SB' convention).
+
+Packed layout: a symmetric matrix A of bandwidth w is stored as a
+``(w + 1, n)`` array with
+
+    band[d, i] = A[i + d, i],   d = 0..w  (main + lower diagonals),
+
+entries past the matrix edge (``i + d >= n``) are zero. This is the
+storage the TT pipeline's intermediate lives in between stage 1
+(``core.sbr.reduce_to_band``) and stage 2 (the wavefront bulge chase in
+``core.sbr.band_to_tridiag``): O(n w) memory instead of O(n^2), and every
+chase update touches an O(w)-column window instead of a full row pair.
+
+``kernels/band_mv`` keeps the transposed ``(n, w+1)`` upper layout
+(``bm[i, d] = A[i, i+d]``); for symmetric matrices the two are each
+other's transpose — see ``to_band_mv_layout`` / ``from_band_mv_layout``.
+
+All routines are pure-jnp, fixed-shape (``w`` static), jit- and
+vmap-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_band(A: jax.Array, w: int, symmetrize: bool = False) -> jax.Array:
+    """Pack the (main + w lower) diagonals of ``A`` into (w+1, n) storage.
+
+    With ``symmetrize=True`` each packed diagonal is the average of the
+    corresponding lower and upper diagonal of ``A`` (the packed analogue of
+    ``linalg_utils.symmetrize`` followed by a band mask).
+    """
+    n = A.shape[-1]
+    rows = []
+    for d in range(w + 1):
+        lo = jnp.diagonal(A, offset=-d, axis1=-2, axis2=-1)
+        if symmetrize and d > 0:
+            lo = 0.5 * (lo + jnp.diagonal(A, offset=d, axis1=-2, axis2=-1))
+        pad = [(0, 0)] * (lo.ndim - 1) + [(0, n - lo.shape[-1])]
+        rows.append(jnp.pad(lo, pad))
+    return jnp.stack(rows, axis=-2)
+
+
+def unpack_band(band: jax.Array) -> jax.Array:
+    """Expand (w+1, n) packed storage back to the dense symmetric (n, n).
+
+    ``A[i, j] = band[|i-j|, min(i, j)]`` within the band, zero outside —
+    one gather, so it vmaps over leading batch dims.
+    """
+    wp1, n = band.shape[-2], band.shape[-1]
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    dd = jnp.abs(i - j)
+    vals = band[..., jnp.clip(dd, 0, wp1 - 1), jnp.minimum(i, j)]
+    return jnp.where(dd < wp1, vals, 0.0)
+
+
+def clean_band(band: jax.Array) -> jax.Array:
+    """Zero the out-of-range tail entries (``i + d >= n``) of packed storage."""
+    wp1, n = band.shape[-2], band.shape[-1]
+    d = jnp.arange(wp1)[:, None]
+    i = jnp.arange(n)[None, :]
+    return jnp.where(i + d < n, band, 0.0)
+
+
+def band_extract_tridiag(band: jax.Array):
+    """Return (d, e) — the main and first sub-diagonal of packed storage."""
+    n = band.shape[-1]
+    return band[..., 0, :], band[..., 1, : n - 1]
+
+
+def to_band_mv_layout(band: jax.Array) -> jax.Array:
+    """(w+1, n) lower-packed -> the (n, w+1) upper layout of kernels/band_mv.
+
+    For symmetric A, ``bm[i, d] = A[i, i+d] = A[(i+d), i] = band[d, i]``:
+    the conversion is a transpose.
+    """
+    return jnp.swapaxes(band, -1, -2)
+
+
+def from_band_mv_layout(bm: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_band_mv_layout`."""
+    return jnp.swapaxes(bm, -1, -2)
+
+
+__all__ = ["pack_band", "unpack_band", "clean_band", "band_extract_tridiag",
+           "to_band_mv_layout", "from_band_mv_layout"]

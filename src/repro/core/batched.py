@@ -31,7 +31,7 @@ from .cholesky import cholesky_upper
 from .lanczos import default_subspace, lanczos_solve_jit
 from .operators import ExplicitC, ImplicitC
 from .residuals import b_normalize
-from .sbr import band_to_tridiag, reduce_to_band
+from .sbr import apply_q2, band_chase, reduce_to_band
 from .standard_form import to_standard_two_trsm
 from .tridiag import apply_q, tridiagonalize
 from .tridiag_eig import eigh_tridiag_selected
@@ -78,9 +78,9 @@ def _pipeline_direct(A, B, key, *, s: int, variant: str, which: str,
         Y = apply_q(res, Z)
     else:  # TT
         band = reduce_to_band(C, w=band_width)
-        tri = band_to_tridiag(band.W, band.Q1, band_width)
-        lam, Z = eigh_tridiag_selected(tri.d, tri.e, ks, key)
-        Y = tri.Q @ Z
+        chase = band_chase(band.Wb, band_width)
+        lam, Z = eigh_tridiag_selected(chase.d, chase.e, ks, key)
+        Y = band.Q1 @ apply_q2(chase, Z, band_width)
     X = back_transform_generalized(U, Y)
     if invert:
         lam, X = _finalize_invert(lam, X, B_orig)

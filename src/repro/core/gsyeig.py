@@ -28,7 +28,7 @@ from .back_transform import back_transform_generalized
 from .cholesky import cholesky_blocked, cholesky_upper
 from .lanczos import default_subspace, lanczos_solve
 from .operators import ExplicitC, ImplicitC
-from .sbr import band_to_tridiag, reduce_to_band
+from .sbr import apply_q2, band_chase, reduce_to_band
 from .standard_form import to_standard_sygst, to_standard_two_trsm
 from .tridiag import apply_q, tridiagonalize, tridiagonalize_blocked
 from .tridiag_eig import eigh_tridiag_selected
@@ -62,9 +62,12 @@ _jit_gs2_sygst = jax.jit(to_standard_sygst, static_argnames=("block",))
 _jit_td1 = jax.jit(tridiagonalize)
 _jit_td1_blocked = jax.jit(tridiagonalize_blocked, static_argnames=("panel",))
 _jit_td3 = jax.jit(apply_q)
-_jit_tt1 = jax.jit(reduce_to_band, static_argnames=("w",))
+_jit_tt1 = jax.jit(reduce_to_band, static_argnames=("w", "n_chunks"))
+# TT4: back-transform the (n, s) Ritz slab through the recorded TT2
+# rotation stream, then one GEMM against the explicit Q1 — no (n, n) Q2
+_jit_tt4 = jax.jit(lambda chase, Q1, Z, w: Q1 @ apply_q2(chase, Z, w),
+                   static_argnames=("w",))
 _jit_bt1 = jax.jit(back_transform_generalized)
-_jit_gemm = jax.jit(lambda Q, Z: Q @ Z)
 
 
 def solve(
@@ -86,6 +89,7 @@ def solve(
     key: jax.Array | None = None,
     mesh=None,
     clustered: bool = False,
+    machine=None,
 ) -> GSyEigResult:
     """`mesh=` (a jax.sharding.Mesh with a 'model' axis plus data axes)
     dispatches the KE and TT variants onto the distributed pipelines in
@@ -99,7 +103,9 @@ def solve(
     land in ``result.info['router']``. ``clustered=True`` tells the router
     the wanted end of the spectrum is clustered (DFT-like valence bands),
     which inflates the Lanczos iteration estimate ~10x — the decisive
-    input for the KE-vs-TT crossover."""
+    input for the KE-vs-TT crossover. ``machine=`` optionally supplies a
+    (possibly measurement-calibrated, see ``MachineParams.from_artifact``)
+    throughput model for the router."""
     n = A.shape[0]
     times: Dict[str, float] = {}
     info: Dict[str, Any] = {"variant": variant, "n": n, "s": s,
@@ -113,7 +119,7 @@ def solve(
         allow = DISTRIBUTED_VARIANTS if mesh is not None else None
         choice = choose_variant(n, s, band_width=band_width, m=m,
                                 clustered=clustered, mesh_shape=mesh_shape,
-                                allow=allow)
+                                allow=allow, machine=machine)
         variant = choice.variant
         info["variant"] = variant
         info["router"] = choice.as_json_dict()
@@ -179,11 +185,11 @@ def solve(
             Y = _timed(times, "TD3")(_jit_td3, res, Z)
         else:
             band = _timed(times, "TT1")(_jit_tt1, C, w=band_width)
-            tri = _timed(times, "TT2")(band_to_tridiag, band.W, band.Q1,
-                                       band_width)
-            lam, Z = _timed(times, "TT3")(eigh_tridiag_selected, tri.d, tri.e,
-                                          ks, key)
-            Y = _timed(times, "TT4")(_jit_gemm, tri.Q, Z)
+            chase = _timed(times, "TT2")(band_chase, band.Wb, band_width)
+            lam, Z = _timed(times, "TT3")(eigh_tridiag_selected, chase.d,
+                                          chase.e, ks, key)
+            Y = _timed(times, "TT4")(_jit_tt4, chase, band.Q1, Z,
+                                     w=band_width)
     else:
         arp_which = "SA" if want_small else "LA"
         if variant == "KE":

@@ -15,12 +15,13 @@ TT (``solve_tt_distributed``, the ELPA2-style two-stage path):
   TT1  dense -> band of width w              (replicated panel QR of the
        O(n w) panel + distributed SYR2K trailing update + distributed
        explicit Q1 accumulation — all BLAS-3, see ``dist_reduce_to_band``)
-  TT2  band -> tridiagonal                   (replicated Givens bulge
-       chasing on the O(n w) band; Q2 accumulated separately so Q1 never
-       leaves the mesh)
+  TT2  band -> tridiagonal                   (replicated wavefront bulge
+       chase on packed O(n w) band storage; the rotation stream is
+       recorded, not accumulated — Q1 never leaves the mesh and no
+       (n, n) Q2 is formed)
   TT3  bisection + inverse iteration         (replicated, O(n s))
-  TT4  Y = Q1 (Q2 Z)                         (collective-free panel matmul
-       against the mesh-resident Q1)
+  TT4  Y = Q1 (Q2 Z)                         (rotation replay on the thin
+       slab + collective-free panel matmul against the mesh-resident Q1)
   BT1  X = U^{-1} Y                          (dist_trsm_left)
 
 The Lanczos driver itself is ``core.lanczos.lanczos_solve`` — the
@@ -36,9 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.band_storage import pack_band
 from repro.core.lanczos import default_subspace, lanczos_solve
 from repro.core.linalg_utils import qr_wy_masked, symmetrize
-from repro.core.sbr import band_to_tridiag
+from repro.core.sbr import apply_q2, band_chase
 from repro.core.tridiag_eig import eigh_tridiag_selected
 from .sharded_la import (_row_spec, _row_sharded, dist_apply_wy_right,
                          dist_apply_wy_two_sided, dist_cholesky,
@@ -133,6 +135,10 @@ _jit_band_clean = jax.jit(
         jnp.abs(jnp.arange(M.shape[0])[:, None]
                 - jnp.arange(M.shape[0])[None, :]) <= w, M, 0.0)),
     static_argnames=("w",))
+# pack the replicated band into compact (w+1, n) storage for the TT2
+# wavefront chase (see core.band_storage / core.sbr.band_to_tridiag)
+_jit_pack_band = jax.jit(lambda M, w: pack_band(M, w, symmetrize=True),
+                         static_argnames=("w",))
 
 
 def dist_reduce_to_band(mesh, C, w: int = 8):
@@ -146,9 +152,10 @@ def dist_reduce_to_band(mesh, C, w: int = 8):
     block; the only data that moves is the O(n w) panel per iteration.
 
     Returns ``(W, Q1)`` both row-block-sharded on the mesh. Storage note:
-    like ``core.sbr.reduce_to_band``, W is kept in full dense (n, n) form
-    (flop-shape-faithful; the O(n w) packed-band layout is the TPU-side
-    optimization discussed in core/sbr.py).
+    W stays in full dense (n, n) form while mesh-resident (row-block
+    sharding needs the rectangular layout); ``solve_tt_distributed`` packs
+    it into compact (w+1, n) band storage right before the replicated TT2
+    wavefront chase (see ``core.band_storage``).
     """
     n = C.shape[0]
     row_sh = _row_sharded(mesh, C)
@@ -198,22 +205,25 @@ def solve_tt_distributed(
     W, Q1 = timed("TT1", lambda c: dist_reduce_to_band(mesh, c, band_width),
                   C)
 
-    # TT2: band -> tridiagonal, replicated (O(n^2 w) Givens work). Q2 is
-    # accumulated from identity so Q1 — the O(n^2) object — never gathers.
+    # TT2: band -> tridiagonal, replicated (O(n^2 w) wavefront Givens work
+    # over packed (w+1, n) band storage). No Q2 is materialized — the
+    # rotation stream is recorded and replayed onto the thin Ritz slab in
+    # TT4, so Q1 — the O(n^2) object — never gathers and Q2 never exists.
     rep = NamedSharding(mesh, P(None, None))
     W_rep = jax.device_put(W, rep)
-    tri = timed("TT2", lambda wr: band_to_tridiag(
-        wr, jnp.eye(n, dtype=A.dtype), band_width), W_rep)
+    chase = timed("TT2", lambda wr: band_chase(
+        _jit_pack_band(wr, band_width), band_width), W_rep)
 
     # TT3: selected eigenpairs of the tridiagonal (replicated, O(n s))
     ks = jnp.arange(s) if which == "smallest" else jnp.arange(n - s, n)
     lam, Z = timed("TT3", lambda d, e: eigh_tridiag_selected(d, e, ks, key),
-                   tri.d, tri.e)
+                   chase.d, chase.e)
 
-    # TT4: Y = Q1 (Q2 Z) — the (n, s) slab is replicated, so the product
-    # against the row-sharded Q1 is a collective-free panel matmul
-    Y = timed("TT4", lambda q2, z: dist_panel_matmul(mesh, Q1, q2 @ z),
-              tri.Q, Z)
+    # TT4: Y = Q1 (Q2 Z) — Q2 Z replays the recorded rotations over the
+    # replicated (n, s) slab; the product against the row-sharded Q1 is a
+    # collective-free panel matmul
+    Y = timed("TT4", lambda z: dist_panel_matmul(
+        mesh, Q1, apply_q2(chase, z, band_width)), Z)
 
     # BT1: X = U^{-1} Y
     X = timed("BT1", lambda y: dist_trsm_left(mesh, U, y), Y)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the batched Givens row-pair rotation.
+
+``pairs`` is (G, 2, L): G independent row pairs. ``cs`` is (G, 2) holding
+(c, s) per pair. Each pair is rotated
+
+    out[g, 0] =  c[g] * pairs[g, 0] + s[g] * pairs[g, 1]
+    out[g, 1] = -s[g] * pairs[g, 0] + c[g] * pairs[g, 1]
+
+— exactly ``linalg_utils.rotate_rows`` applied to G disjoint row pairs at
+once (the wavefront unit of the TT2 bulge chase).
+"""
+import jax.numpy as jnp
+
+
+def rot_apply_ref(pairs, cs):
+    c = cs[:, 0][:, None]
+    s = cs[:, 1][:, None]
+    x0 = pairs[:, 0, :]
+    x1 = pairs[:, 1, :]
+    return jnp.stack([c * x0 + s * x1, -s * x0 + c * x1], axis=1)

@@ -159,13 +159,17 @@ def test_reduce_to_band(n, w):
     # Q1 orthogonal
     np.testing.assert_allclose(np.asarray(band.Q1.T @ band.Q1), np.eye(n),
                                atol=1e-12)
-    # W = Q1^T C Q1 and banded
+    # W = Q1^T C Q1 and banded (Wb is the packed (w+1, n) storage; its
+    # dense expansion is band-masked by construction, so the off-band part
+    # of Q1^T C Q1 must be negligible)
+    W = np.asarray(band.dense())
+    assert band.Wb.shape == (w + 1, n)
     Wref = np.asarray(band.Q1.T @ C @ band.Q1)
-    np.testing.assert_allclose(np.asarray(band.W), Wref, atol=1e-9)
+    np.testing.assert_allclose(W, Wref, atol=1e-9)
     i, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
-    assert np.all(np.abs(np.asarray(band.W)[np.abs(i - j) > w]) < 1e-10)
+    assert np.all(np.abs(Wref[np.abs(i - j) > w]) < 1e-10)
     # eigenvalues preserved
-    np.testing.assert_allclose(np.linalg.eigvalsh(np.asarray(band.W)),
+    np.testing.assert_allclose(np.linalg.eigvalsh(W),
                                np.linalg.eigvalsh(np.asarray(C)),
                                rtol=1e-9, atol=1e-9)
 
@@ -174,7 +178,7 @@ def test_reduce_to_band(n, w):
 def test_band_to_tridiag(n, w):
     C = _rand_sym(n, K4)
     band = reduce_to_band(C, w=w)
-    tri = band_to_tridiag(band.W, band.Q1, w)
+    tri = band_to_tridiag(band.Wb, band.Q1, w)
     # Q orthogonal
     np.testing.assert_allclose(np.asarray(tri.Q.T @ tri.Q), np.eye(n),
                                atol=1e-11)

@@ -23,7 +23,10 @@ GOLDEN = [
     ((9997, 100, None, True), "TT"),
     ((17243, 448, None, False), "TT"),    # paper Exp. 2 (DFT/FLEUR)
     ((17243, 448, None, True), "TT"),
-    ((512, 8, None, False), "TT"),
+    # knife-edge cell: since the model charges TT4 for replaying the TT2
+    # rotation stream over the Ritz slab (the cost the lazy-Q2 chase
+    # actually pays), KE edges out TT here by <1%
+    ((512, 8, None, False), "KE"),
     # few iterations at moderate n: skipping GS2 (KI) beats paying 2n^3
     # to make the matvec cheaper (KE)
     ((4096, 32, None, False), "KI"),
@@ -117,3 +120,66 @@ def test_auto_matches_explicit(gen, n, s, which):
     np.testing.assert_allclose(np.asarray(res_auto.evals),
                                np.asarray(res_explicit.evals),
                                rtol=1e-12, atol=1e-12)
+
+
+# --------------------------------------- measurement-calibrated machine ---
+
+def _race_artifact_path():
+    import os
+    return os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_variant_race.json")
+
+
+def test_from_artifact_returns_calibrated_params():
+    mach = MachineParams.from_artifact(_race_artifact_path())
+    base = MachineParams()
+    assert mach.peak_flops > 0 and mach.mem_bw > 0
+    # the host-mesh measurements are orders of magnitude off the modeled
+    # multicore rates; calibration must actually move the params
+    assert mach.peak_flops != base.peak_flops
+    assert mach.dtype_bytes == base.dtype_bytes
+
+
+def test_calibrated_ordering_matches_measured():
+    """The router's predicted TT-vs-KE ordering under the calibrated
+    machine must agree with the measured ordering in the race artifact —
+    whenever the measurement itself resolves an ordering (races decided by
+    less than 20% on a dispatch-dominated host mesh are ties; asserting an
+    order there would test noise). Always asserted: calibration pulls every
+    predicted total to within 2 orders of magnitude of its measurement —
+    the uncalibrated model sits ~10^6 off (19us predicted vs 16s measured
+    was this issue's headline gap), so this pins the fit doing real work."""
+    path = _race_artifact_path()
+    with open(path) as f:
+        art = json.load(f)
+    mach = MachineParams.from_artifact(path)
+    base = MachineParams()
+    n, s = art["n"], art["s"]
+    mesh_shape = (art["n_devices"],)
+    for race in art["races"]:
+        measured = {r["variant"]: r["wall_s_median"] for r in race["measured"]}
+        n_iter = next((r["n_matvec"] for r in race["measured"]
+                       if "n_matvec" in r), None)
+        w = next((r["band_width"] for r in race["measured"]
+                  if "band_width" in r), 8)
+        pred, pred_base = {}, {}
+        for v in measured:
+            kw = {"n_iter": n_iter} if v in ("KE", "KI") else {}
+            kw.update(mesh_shape=mesh_shape, band_width=w)
+            pred[v] = predict_stage_times(v, n, s, machine=mach,
+                                          **kw)["Tot."]
+            pred_base[v] = predict_stage_times(v, n, s, machine=base,
+                                               **kw)["Tot."]
+        for v, t_meas in measured.items():
+            ratio = pred[v] / t_meas
+            base_ratio = pred_base[v] / t_meas
+            assert 1e-2 <= ratio <= 1e2, (race["problem"], v, pred, measured)
+            # strictly closer than the uncalibrated model, which is off
+            # by orders of magnitude on the host mesh
+            assert abs(np.log10(ratio)) < abs(np.log10(base_ratio))
+        t_sorted = sorted(measured.values())
+        if t_sorted[0] < 0.8 * t_sorted[1]:   # ordering is resolvable
+            meas_order = sorted(measured, key=measured.get)
+            pred_order = sorted(pred, key=pred.get)
+            assert pred_order == meas_order, (race["problem"], pred,
+                                              measured)
