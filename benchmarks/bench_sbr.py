@@ -1,7 +1,14 @@
-"""TT2 storage shootout: dense-storage bulge chase vs the packed wavefront.
+"""TT1/TT2 shootout: fused one-program sweeps vs their dispatch-heavy pasts.
 
 Measures, per (n, w):
 
+  * TT1 stepwise — ``reduce_to_band_stepwise`` (the old per-panel HOST
+    loop: one slice + panel-QR + trailing-update + Q1 dispatch per panel)
+  * TT1 full / TT1 window — the fused one-program sweep with full-(n, n)
+    masked updates (``n_chunks=1``) vs the shrinking trailing-window ladder
+  * TT1 auto — the production default (``default_n_chunks`` picks the
+    ladder by size; cells where it picks ``n_chunks=1`` reuse the ``full``
+    measurement, so ``speedup_tt1`` is exactly 1.0 there by construction)
   * TT2 dense   — ``band_to_tridiag_dense`` (the old one-rotation-per-
     dispatch implementation on full (n, n) storage, full explicit Q)
   * TT2 band    — ``band_chase`` + ``accumulate_q2`` (packed (w+1, n)
@@ -9,19 +16,26 @@ Measures, per (n, w):
     apples-to-apples explicit-Q comparison
   * TT2 chase / TT4 replay — the production split: chase only, then the
     rotation stream replayed over an (n, s) Ritz slab (``apply_q2``)
-  * TT1 full / TT1 window  — old full-(n, n) masked panel updates
-    (``n_chunks=1``) vs the shrinking trailing-window ladder
-  * old/new full TT — (TT1 full + TT2 dense) vs (TT1 window + chase+replay)
+  * old/new full TT — (TT1 stepwise + TT2 dense) vs (TT1 auto +
+    chase+replay)
+
+How to read the TT1 columns in ``BENCH_sbr.json``: ``tt1_stepwise_s`` vs
+``tt1_auto_s`` is the dispatch story (``speedup_tt1_fused``, the
+one-program win); ``tt1_full_s`` vs ``tt1_auto_s`` is the window-ladder
+story (``speedup_tt1``, must be >= 1.0 in every cell since the ladder is
+auto-sized); ``tt1_n_chunks`` records what the auto-sizer picked.
 
 Standalone:
 
     PYTHONPATH=src python -m benchmarks.bench_sbr [--quick]
 
 ``--quick`` runs the single CI gate cell (n=256, w=8) and EXITS NONZERO if
-the band-storage TT2 is not faster than the dense-storage chase — the
-nightly guard against a silent fallback regression. The full sweep
-(n in {128, 256, 512} x w in {8, 32}) emits ``artifacts/BENCH_sbr.json``
-and the usual ``name,us_per_call,derived`` CSV rows.
+(a) the band-storage TT2 is not faster than the dense-storage chase, or
+(b) the fused one-program TT1 sweep is not faster than the stepwise
+per-panel host loop — the nightly guards against silent fallback /
+dispatch regressions. The full sweep (n in {128, 256, 512} x w in {8, 32})
+emits ``artifacts/BENCH_sbr.json`` and the usual
+``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
@@ -52,18 +66,31 @@ def _median_time(fn, *args, repeats: int = 3):
 
 def bench_cell(n: int, w: int, s: int, repeats: int, dense_repeats: int):
     from repro.core.band_storage import unpack_band
-    from repro.core.sbr import (accumulate_q2, apply_q2, band_chase,
-                                band_to_tridiag_dense, reduce_to_band)
+    from repro.core.sbr import (_n_panels, accumulate_q2, apply_q2,
+                                band_chase, band_to_tridiag_dense,
+                                default_n_chunks, reduce_to_band,
+                                reduce_to_band_stepwise)
 
     key = jax.random.PRNGKey(1111 * n + w)
     M = jax.random.normal(key, (n, n), jnp.float64)
     C = 0.5 * (M + M.T)
     Z = jax.random.normal(jax.random.fold_in(key, 1), (n, s), jnp.float64)
 
-    t_tt1_win, band = _median_time(
-        lambda c: reduce_to_band(c, w=w), C, repeats=repeats)
-    t_tt1_full, _ = _median_time(
+    n_chunks = default_n_chunks(n, w)
+    ladder = max(min(4, _n_panels(n, w)), 1)  # the ladder, threshold-free
+    t_tt1_full, band = _median_time(
         lambda c: reduce_to_band(c, w=w, n_chunks=1), C, repeats=repeats)
+    t_tt1_win, _ = _median_time(
+        lambda c: reduce_to_band(c, w=w, n_chunks=ladder), C,
+        repeats=repeats)
+    # the production default: the auto-sizer picks either n_chunks=1 (the
+    # 'full' program) or min(4, n_panels) (the 'window' program), so reuse
+    # the matching measurement — re-timing an identical program would only
+    # record noise
+    t_tt1_auto = t_tt1_full if n_chunks == 1 else t_tt1_win
+    t_tt1_step, _ = _median_time(
+        lambda c: reduce_to_band_stepwise(c, w=w), C,
+        repeats=min(repeats, 2))
 
     Wd = unpack_band(band.Wb)
     t_dense, ref = _median_time(
@@ -88,16 +115,19 @@ def bench_cell(n: int, w: int, s: int, repeats: int, dense_repeats: int):
     t_band_replay = t_chase + t_apply
     return {
         "n": n, "w": w, "s": s,
+        "tt1_stepwise_s": t_tt1_step,
         "tt1_full_s": t_tt1_full, "tt1_window_s": t_tt1_win,
+        "tt1_auto_s": t_tt1_auto, "tt1_n_chunks": n_chunks,
         "tt2_dense_s": t_dense,
         "tt2_band_fullq_s": t_band_fullq,
         "tt2_chase_s": t_chase, "tt4_replay_s": t_apply,
-        "old_tt_s": t_tt1_full + t_dense,
-        "new_tt_s": t_tt1_win + t_band_replay,
+        "old_tt_s": t_tt1_step + t_dense,
+        "new_tt_s": t_tt1_auto + t_band_replay,
         "speedup_tt2_fullq": t_dense / t_band_fullq,
         "speedup_tt2_replay": t_dense / t_band_replay,
-        "speedup_tt1": t_tt1_full / t_tt1_win,
-        "speedup_full_tt": (t_tt1_full + t_dense) / (t_tt1_win
+        "speedup_tt1": t_tt1_full / t_tt1_auto,
+        "speedup_tt1_fused": t_tt1_step / t_tt1_auto,
+        "speedup_full_tt": (t_tt1_step + t_dense) / (t_tt1_auto
                                                      + t_band_replay),
         "max_abs_d_err_vs_dense": err_d,
         "max_abs_q_err_vs_dense": err_q,
@@ -108,7 +138,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI gate: n=256/w=8 only; fail if band TT2 is not "
-                         "faster than the dense chase")
+                         "faster than the dense chase OR the fused TT1 "
+                         "sweep is not faster than the stepwise host loop")
     ap.add_argument("--ns", type=int, nargs="*", default=[128, 256, 512])
     ap.add_argument("--ws", type=int, nargs="*", default=[8, 32])
     ap.add_argument("--s", type=int, default=8)
@@ -130,6 +161,12 @@ def main() -> int:
         dense_repeats = 1 if n >= 512 else repeats
         cell = bench_cell(n, w, args.s, repeats, dense_repeats)
         out["cells"].append(cell)
+        print(f"bench_sbr_tt1_stepwise_n{n}_w{w},"
+              f"{cell['tt1_stepwise_s']*1e6:.1f},")
+        print(f"bench_sbr_tt1_fused_n{n}_w{w},{cell['tt1_auto_s']*1e6:.1f},"
+              f"n_chunks={cell['tt1_n_chunks']};"
+              f"vs_stepwise={cell['speedup_tt1_fused']:.1f}x;"
+              f"vs_full={cell['speedup_tt1']:.2f}x")
         print(f"bench_sbr_tt2_dense_n{n}_w{w},{cell['tt2_dense_s']*1e6:.1f},")
         print(f"bench_sbr_tt2_band_n{n}_w{w},"
               f"{cell['tt2_band_fullq_s']*1e6:.1f},"
@@ -143,15 +180,20 @@ def main() -> int:
 
     if args.quick:
         cell = out["cells"][0]
-        ok = (cell["tt2_band_fullq_s"] < cell["tt2_dense_s"]
-              and cell["tt2_chase_s"] + cell["tt4_replay_s"]
-              < cell["tt2_dense_s"])
-        print(f"bench_sbr_quick_gate,0.0,band_faster={ok}")
-        if not ok:
+        ok_tt2 = (cell["tt2_band_fullq_s"] < cell["tt2_dense_s"]
+                  and cell["tt2_chase_s"] + cell["tt4_replay_s"]
+                  < cell["tt2_dense_s"])
+        ok_tt1 = cell["tt1_auto_s"] < cell["tt1_stepwise_s"]
+        print(f"bench_sbr_quick_gate,0.0,band_faster={ok_tt2};"
+              f"tt1_fused_faster={ok_tt1}")
+        if not ok_tt2:
             print("FAIL: band-storage TT2 is not faster than the "
                   "dense-storage chase at n=256", file=sys.stderr)
-            return 1
-        return 0
+        if not ok_tt1:
+            print("FAIL: the fused one-program TT1 sweep is not faster "
+                  "than the stepwise per-panel host loop at n=256",
+                  file=sys.stderr)
+        return 0 if (ok_tt2 and ok_tt1) else 1
 
     os.makedirs(args.outdir, exist_ok=True)
     path = os.path.join(args.outdir, "BENCH_sbr.json")

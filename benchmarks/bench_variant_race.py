@@ -106,8 +106,19 @@ def main() -> None:
             race["measured"].append(
                 bench_variant(variant, prob, args.s, args.band_width,
                               args.m, mesh, args.repeats))
-        measured_winner = min(race["measured"],
+        # an unconverged run (KE retiring at max_restarts) is NOT a winner:
+        # it returned approximations, so it only competes if every variant
+        # failed to converge. The artifact keeps both the eligibility list
+        # and the naive all-comers timing winner for transparency.
+        unconverged = [r["variant"] for r in race["measured"]
+                       if not r.get("converged", True)]
+        eligible = [r for r in race["measured"]
+                    if r.get("converged", True)] or race["measured"]
+        measured_winner = min(eligible,
                               key=lambda r: r["wall_s_median"])["variant"]
+        race["unconverged"] = unconverged
+        race["fastest_any"] = min(race["measured"],
+                                  key=lambda r: r["wall_s_median"])["variant"]
         race["measured_winner"] = measured_winner
         race["router_agrees"] = measured_winner == choice.variant
         out["races"].append(race)
@@ -115,13 +126,17 @@ def main() -> None:
     print("name,us_per_call,derived")
     for race in out["races"]:
         for r in race["measured"]:
+            conv = r.get("converged", True)
             print(f"bench_variant_race_{race['problem']}_{r['variant']},"
                   f"{r['wall_s_median'] * 1e6:.1f},"
-                  f"eval_err={r['max_abs_eval_error']:.3e}")
+                  f"eval_err={r['max_abs_eval_error']:.3e}"
+                  + ("" if conv else ";UNCONVERGED"))
         print(f"bench_variant_race_{race['problem']}_router,0.0,"
               f"pick={race['router']['variant']};"
               f"measured={race['measured_winner']};"
-              f"agrees={race['router_agrees']}")
+              f"agrees={race['router_agrees']}"
+              + (f";unconverged={'+'.join(race['unconverged'])}"
+                 if race["unconverged"] else ""))
 
     os.makedirs(args.outdir, exist_ok=True)
     path = os.path.join(args.outdir, "BENCH_variant_race.json")

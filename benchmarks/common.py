@@ -12,10 +12,15 @@ MD_N, MD_S = 384, 4          # ~1% of the spectrum, as in the paper's MD
 DFT_N, DFT_S = 512, 13       # ~2.6%, as in the paper's DFT
 
 BAND_W = 8                   # TT bandwidth at CI scale (paper used 32 at 17k)
-# NOTE on scale: TT2 used to dominate these tables through a dense-storage
+# NOTE on scale: the TT stages used to dominate these tables through
+# dispatch-heavy structure, in two installments. TT2 was a dense-storage
 # one-rotation-per-dispatch chase; it now runs as the packed-band wavefront
-# chase (core/sbr.py + kernels/rot_apply, see benchmarks/bench_sbr.py for
-# the dense-vs-band shootout), so n is sized only by the O(n^3) stages.
+# chase (core/sbr.py + kernels/rot_apply). Then TT1 — which is NOT cheap:
+# once the chase was fixed it was the dominant stage of a TT solve — paid a
+# host round trip per panel; it is now one fused program per sweep
+# (kernels/house_panel + the fori_loop ladder in core/sbr.py, shard_map'd
+# whole in dist/sharded_la.py). benchmarks/bench_sbr.py measures both
+# shootouts, so n here is sized only by the O(n^3) stage flops.
 
 
 @lru_cache(maxsize=None)

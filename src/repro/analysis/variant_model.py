@@ -6,14 +6,22 @@ estimated Lanczos iterations, mesh shape)`` and exposes
 (arXiv:1504.06443) argue for: hybrid selection between the direct
 (reduction) and iterative (Krylov) paths.
 
-Model: every stage is (flops, bytes, collective_bytes); its time is the
-roofline ``max(flops / (P * peak_flops), bytes / (P * mem_bw)) +
-collective_bytes / link_bw`` with P = number of devices. This is exactly
-the three-term split of ``analysis.roofline``; the default
-``MachineParams`` are the paper's multicore regime (flop:byte ratio ~5)
-and ``MachineParams.tpu_v5e()`` reuses the roofline constants. A measured
-calibration point can be folded in from a compiled executable via
-``MachineParams.from_compiled`` (which reads ``roofline.cost_analysis_dict``).
+Model: every stage is (flops, bytes, collective_bytes, dispatches); its
+time is the roofline ``max(flops / (P * peak_flops), bytes / (P * mem_bw))
++ collective_bytes / link_bw + dispatches * t_dispatch`` with P = number
+of devices. The first three terms are exactly the split of
+``analysis.roofline``; the fourth charges each host->device program
+dispatch a fixed latency — the term that closed the 19us-predicted /
+14s-measured gap of the PR-4-era race artifact: a host-CPU mesh pays
+O(10ms) per shard_map dispatch, so a 300-restart Lanczos run (3 dispatches
+per restart) is dispatch-bound no matter what the flops say. The default
+``MachineParams`` are the paper's multicore regime (flop:byte ratio ~5,
+``t_dispatch = 0`` — a real accelerator queue hides launch latency at this
+granularity) and ``MachineParams.tpu_v5e()`` reuses the roofline
+constants. Measured calibration points can be folded in from a compiled
+executable via ``MachineParams.from_compiled`` (which reads
+``roofline.cost_analysis_dict``) or from a benchmark artifact via
+``MachineParams.from_artifact`` (which also fits ``t_dispatch``).
 
 The qualitative predictions reproduce the paper's Tables: TD1 is
 memory-bound (BLAS-2), TT converts it to compute-bound BLAS-3 at the cost
@@ -28,7 +36,7 @@ import json
 import math
 from typing import Dict, Optional, Sequence
 
-from repro.core.lanczos import default_subspace
+from repro.core.lanczos import default_subspace, restart_schedule
 
 from .roofline import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16, cost_analysis_dict
 
@@ -44,6 +52,7 @@ class MachineParams:
     mem_bw: float = 100e9          # B/s per device
     link_bw: float = 25e9          # B/s inter-device
     dtype_bytes: int = 8
+    t_dispatch: float = 0.0        # s per host->device program dispatch
 
     @classmethod
     def tpu_v5e(cls) -> "MachineParams":
@@ -80,16 +89,19 @@ class MachineParams:
         ``path`` is a ``BENCH_variant_race.json``-schema artifact: top-level
         ``n``/``s``/``n_devices`` plus ``races[].measured[]`` records with
         per-stage wall-clock (``stage_times_s``). Every measured stage is
-        matched to its modeled ``(flops, bytes)`` from :func:`stage_costs`
-        (for Krylov stages the *measured* ``n_matvec`` replaces the
-        heuristic iteration estimate), then an alternating roofline fit
-        recovers the effective ``peak_flops`` / ``mem_bw``: classify each
-        stage by its currently-dominant roofline term, refit each rate as
-        total-work / total-time of its class, iterate. Unlike a single
-        uniform rescale, this moves the flop:byte ratio, so the calibrated
-        router can flip a predicted ordering to match the measured one —
-        the whole point of folding real measurements (dispatch overhead,
-        fusion quality, host-mesh partitioning costs) back into the model.
+        matched to its modeled ``(flops, bytes, dispatches)`` from
+        :func:`stage_costs` (for Krylov stages the *measured* ``n_matvec``
+        replaces the heuristic iteration estimate), then an alternating
+        fit recovers the effective ``peak_flops`` / ``mem_bw`` AND the
+        per-dispatch latency ``t_dispatch``: (1) given the current rates,
+        least-squares the roofline residual against each stage's dispatch
+        count; (2) classify each stage by its currently-dominant roofline
+        term and refit each rate as total-work / total-time of its class
+        after subtracting the dispatch share; iterate. Unlike a single
+        uniform rescale, this moves the flop:byte ratio and splits
+        dispatch latency out of throughput — the term that lets the
+        calibrated router predict a multi-second dispatch-bound Lanczos
+        run instead of the microseconds its flops imply.
         """
         base = base or cls()
         with open(path) as f:
@@ -109,29 +121,45 @@ class MachineParams:
                 for st, t in rec.get("stage_times_s", {}).items():
                     c = costs.get(st)
                     if c is not None and t > 0.0:
-                        samples.append((c.flops, c.bytes,
-                                        c.collective_bytes, float(t)))
+                        samples.append((c.flops, c.bytes, c.collective_bytes,
+                                        c.dispatches, float(t)))
         if not samples:
             return base
         pf, pm = base.peak_flops, base.mem_bw
+        td = base.t_dispatch
         for _ in range(n_fit_iters):
+            # (1) dispatch latency: least squares of the roofline residual
+            # against the dispatch counts (clamped nonnegative)
+            num = den = 0.0
+            for F, B, Cb, D, t in samples:
+                if D <= 0.0:
+                    continue
+                t_roof = (max(F / (p * pf), B / (p * pm))
+                          + (Cb / base.link_bw if p > 1 else 0.0))
+                num += D * (t - t_roof)
+                den += D * D
+            new_td = max(num / den, 0.0) if den > 0.0 else td
+            # (2) throughputs on the post-dispatch residual
             work = {"f": 0.0, "b": 0.0}
             wall = {"f": 0.0, "b": 0.0}
-            for F, B, Cb, t in samples:
-                t_eff = max(t - (Cb / base.link_bw if p > 1 else 0.0),
-                            0.25 * t)
+            for F, B, Cb, D, t in samples:
+                t_eff = max(t - (Cb / base.link_bw if p > 1 else 0.0)
+                            - D * new_td, 0.05 * t)
                 cls_key = "f" if F / pf >= B / pm else "b"
                 work[cls_key] += (F if cls_key == "f" else B) / p
                 wall[cls_key] += t_eff
             new_pf = work["f"] / wall["f"] if wall["f"] > 0 else pf
             new_pm = work["b"] / wall["b"] if wall["b"] > 0 else pm
             if (abs(new_pf - pf) <= 1e-9 * pf
-                    and abs(new_pm - pm) <= 1e-9 * pm):
+                    and abs(new_pm - pm) <= 1e-9 * pm
+                    and abs(new_td - td) <= 1e-9 * max(td, 1e-30)):
+                td = new_td
                 break
-            pf, pm = new_pf, new_pm
+            pf, pm, td = new_pf, new_pm, new_td
         link_scale = math.sqrt((pf / base.peak_flops) * (pm / base.mem_bw))
         return dataclasses.replace(base, peak_flops=pf, mem_bw=pm,
-                                   link_bw=base.link_bw * link_scale)
+                                   link_bw=base.link_bw * link_scale,
+                                   t_dispatch=td)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +167,9 @@ class StageCost:
     flops: float
     bytes: float
     collective_bytes: float = 0.0
+    #: host->device program dispatches the stage's implementation issues
+    #: (NOT divided by device count: dispatch latency is serial on the host)
+    dispatches: float = 0.0
 
     def seconds(self, machine: MachineParams, n_devices: int) -> float:
         p = max(int(n_devices), 1)
@@ -146,7 +177,8 @@ class StageCost:
         t_mem = self.bytes / (p * machine.mem_bw)
         t_coll = (self.collective_bytes / machine.link_bw
                   if p > 1 else 0.0)
-        return max(t_comp, t_mem) + t_coll
+        return (max(t_comp, t_mem) + t_coll
+                + self.dispatches * machine.t_dispatch)
 
 
 def estimate_lanczos_iters(n: int, s: int, m: Optional[int] = None,
@@ -160,6 +192,14 @@ def estimate_lanczos_iters(n: int, s: int, m: Optional[int] = None,
     per_restart = max(m - s, 1)
     n_restarts = 24 if clustered else 4
     return int(min(n * 2, m + n_restarts * per_restart))
+
+
+def estimate_lanczos_restarts(n_iter: int, s: int, m: int) -> int:
+    """Thick-restart count implied by a matvec budget: the first sweep does
+    m matvecs, every later restart extends by ``per_restart`` more (the
+    ``core.lanczos.restart_schedule`` the drivers themselves use)."""
+    _, per_restart = restart_schedule(s, m)
+    return max(1, -(-(max(n_iter - m, 0)) // per_restart) + 1)
 
 
 def _mesh_devices(mesh_shape: Optional[Sequence[int]]) -> int:
@@ -176,13 +216,18 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
                 clustered: bool = False,
                 machine: Optional[MachineParams] = None,
                 ) -> Dict[str, StageCost]:
-    """Per-stage (flops, bytes, collective_bytes) for one variant.
+    """Per-stage (flops, bytes, collective_bytes, dispatches) per variant.
 
     Flop counts are the standard LAPACK/SBR operation counts; byte counts
     encode each stage's BLAS level (BLAS-2 stages stream the trailing
     matrix once per reflector — the n^3-bytes signature of DSYTRD — while
     BLAS-3 stages touch each operand O(n/block) times, modeled as a small
-    constant number of passes).
+    constant number of passes). Dispatch counts model the CURRENT
+    implementations: every direct stage is a single (or a couple of)
+    jitted program(s) — in particular TT1 is the fused one-program panel
+    sweep, NOT the old O(n/w)-dispatch host loop — while the Krylov
+    drivers issue 3 dispatches per thick restart (segment, restart math,
+    convergence fetch: see ``core.lanczos``).
     """
     assert variant in VARIANTS, variant
     machine = machine or MachineParams()
@@ -197,23 +242,26 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
 
     costs: Dict[str, StageCost] = {}
     # GS1: blocked Cholesky — BLAS-3
-    costs["GS1"] = StageCost(n3 / 3.0, 3 * n2 * b, coll_panel / 2)
+    costs["GS1"] = StageCost(n3 / 3.0, 3 * n2 * b, coll_panel / 2, 1)
     # GS2: two full-matrix TRSMs (the paper's 2n^3 pick) — BLAS-3
     if variant != "KI":
-        costs["GS2"] = StageCost(2 * n3, 6 * n2 * b, coll_panel)
+        costs["GS2"] = StageCost(2 * n3, 6 * n2 * b, coll_panel, 2)
 
     if variant == "TD":
         # TD1: BLAS-2 tridiagonalization — 4/3 n^3 flops but the trailing
         # matrix is streamed once per reflector: ~n^3/3 elements read.
-        costs["TD1"] = StageCost(4 * n3 / 3.0, (n3 / 3.0) * b)
-        costs["TD2"] = StageCost(60.0 * n * s, 10.0 * n * s * b)
-        costs["TD3"] = StageCost(4 * n2 * s, 3 * n2 * b)
+        costs["TD1"] = StageCost(4 * n3 / 3.0, (n3 / 3.0) * b, 0.0, 1)
+        costs["TD2"] = StageCost(60.0 * n * s, 10.0 * n * s * b, 0.0, 1)
+        costs["TD3"] = StageCost(4 * n2 * s, 3 * n2 * b, 0.0, 1)
     elif variant == "TT":
         # TT1: band reduction 4/3 n^3 + explicit Q1 accumulation 2 n^3,
         # all GEMMs (BLAS-3: the trailing matrix streams once per panel,
-        # n/w passes — the 1/w factor is what makes TT compute-bound)
+        # n/w passes — the 1/w factor is what makes TT compute-bound).
+        # The whole sweep is ONE fused program + the band repack: 2
+        # dispatches, NOT n/w (see core.sbr.reduce_to_band /
+        # dist.sharded_la.band_sweep_program).
         costs["TT1"] = StageCost(4 * n3 / 3.0 + 2 * n3,
-                                 (n3 / max(w, 1)) * b, coll_panel)
+                                 (n3 / max(w, 1)) * b, coll_panel, 2)
         # TT2: wavefront bulge chasing over packed (w+1, n) band storage —
         # O(n^2 w) flops touching only the O(n w) band. The rotation stream
         # is recorded, NOT accumulated into an (n, n) Q2 (that would cost
@@ -221,24 +269,29 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
         # old 19us-predicted / 16s-measured gap); the stream replays onto
         # the thin slab in TT4.
         h_w = sum(1.0 / bb for bb in range(2, max(w, 2) + 1))
-        costs["TT2"] = StageCost(6 * n2 * w, 6 * n2 * w * b / 8)
-        costs["TT3"] = StageCost(60.0 * n * s, 10.0 * n * s * b)
+        costs["TT2"] = StageCost(6 * n2 * w, 6 * n2 * w * b / 8, 0.0, 1)
+        costs["TT3"] = StageCost(60.0 * n * s, 10.0 * n * s * b, 0.0, 1)
         # TT4: replay the ~n^2/2 sum 1/b recorded rotations over the (n, s)
         # Ritz slab (6s flops each), then one GEMM against the explicit Q1
         costs["TT4"] = StageCost(
             2 * n2 * s + 2 * n * s * s + 3 * n2 * s * h_w,
-            3 * n2 * b + (n2 / 2) * h_w * b, n * s * b)
+            3 * n2 * b + (n2 / 2) * h_w * b, n * s * b, 2)
     else:
         # Krylov iteration: each matvec streams the n^2 operand (memory
         # bound); re-orthogonalization adds 8 n m flops per step. KI's
-        # implicit operator is two triangular solves + one SYMV.
+        # implicit operator is two triangular solves + one SYMV. The host
+        # issues 3 dispatches per thick restart (one fused m-step segment,
+        # one restart-math program, one scalar convergence fetch) — at
+        # O(ms) per dispatch on a host mesh this term, not the flops, is
+        # what makes a 300-restart run take ~10s.
         mv_flops = (2 * n2 if variant == "KE" else 4 * n2) + 8.0 * n * m
         mv_bytes = (n2 if variant == "KE" else 2 * n2) * b + 2.0 * n * m * b
         costs[f"{variant}_iter"] = StageCost(
-            n_iter * mv_flops, n_iter * mv_bytes, n_iter * n * b)
+            n_iter * mv_flops, n_iter * mv_bytes, n_iter * n * b,
+            3 * estimate_lanczos_restarts(n_iter, s, m))
 
     # BT1: X = U^{-1} Y, one TRSM on an (n, s) slab
-    costs["BT1"] = StageCost(n2 * s, 2 * n2 * b, n * s * b)
+    costs["BT1"] = StageCost(n2 * s, 2 * n2 * b, n * s * b, 1)
     return costs
 
 

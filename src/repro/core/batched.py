@@ -77,6 +77,8 @@ def _pipeline_direct(A, B, key, *, s: int, variant: str, which: str,
         lam, Z = eigh_tridiag_selected(res.d, res.e, ks, key)
         Y = apply_q(res, Z)
     else:  # TT
+        # the fused one-program panel sweep (kernels/house_panel + SYR2K
+        # ladder) vmaps as-is: default_n_chunks sees the per-pencil n
         band = reduce_to_band(C, w=band_width)
         chase = band_chase(band.Wb, band_width)
         lam, Z = eigh_tridiag_selected(chase.d, chase.e, ks, key)

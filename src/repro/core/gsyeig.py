@@ -28,7 +28,8 @@ from .back_transform import back_transform_generalized
 from .cholesky import cholesky_blocked, cholesky_upper
 from .lanczos import default_subspace, lanczos_solve
 from .operators import ExplicitC, ImplicitC
-from .sbr import apply_q2, band_chase, reduce_to_band
+from . import sbr as _sbr
+from .sbr import apply_q2, band_chase, default_n_chunks, reduce_to_band
 from .standard_form import to_standard_sygst, to_standard_two_trsm
 from .tridiag import apply_q, tridiagonalize, tridiagonalize_blocked
 from .tridiag_eig import eigh_tridiag_selected
@@ -62,7 +63,6 @@ _jit_gs2_sygst = jax.jit(to_standard_sygst, static_argnames=("block",))
 _jit_td1 = jax.jit(tridiagonalize)
 _jit_td1_blocked = jax.jit(tridiagonalize_blocked, static_argnames=("panel",))
 _jit_td3 = jax.jit(apply_q)
-_jit_tt1 = jax.jit(reduce_to_band, static_argnames=("w", "n_chunks"))
 # TT4: back-transform the (n, s) Ritz slab through the recorded TT2
 # rotation stream, then one GEMM against the explicit Q1 — no (n, n) Q2
 _jit_tt4 = jax.jit(lambda chase, Q1, Z, w: Q1 @ apply_q2(chase, Z, w),
@@ -156,6 +156,12 @@ def solve(
                 return_info=True)
         times.update(dinfo.pop("stage_times"))
         info.update(dinfo)
+        if not info.get("converged", True):
+            info.setdefault("warnings", []).append(
+                f"{variant} retired UNCONVERGED after "
+                f"{info.get('n_restart', max_restarts)} restarts "
+                f"(max_restarts={max_restarts}); eigenpairs are the best "
+                f"Ritz approximations at exit")
         return _finalize(lam, X, B_orig, invert, times, info)
 
     # ---- GS1: B = U^T U --------------------------------------------------
@@ -184,7 +190,15 @@ def solve(
                                           ks, key)
             Y = _timed(times, "TD3")(_jit_td3, res, Z)
         else:
-            band = _timed(times, "TT1")(_jit_tt1, C, w=band_width)
+            # TT1 split: the sweep is ONE compiled program (reduce_to_band
+            # is internally jitted); record the ladder choice + dispatch
+            # count so the stage timing is attributable
+            n_chunks = default_n_chunks(n, band_width)
+            d0 = _sbr.dispatch_count()
+            band = _timed(times, "TT1")(reduce_to_band, C, w=band_width,
+                                        n_chunks=n_chunks)
+            info["tt1"] = {"n_chunks": int(n_chunks),
+                           "dispatches": int(_sbr.dispatch_count() - d0)}
             chase = _timed(times, "TT2")(band_chase, band.Wb, band_width)
             lam, Z = _timed(times, "TT3")(eigh_tridiag_selected, chase.d,
                                           chase.e, ks, key)
@@ -212,6 +226,11 @@ def solve(
                     converged=bool(lres.converged),
                     resid_bounds=[float(r) for r in
                                   jnp.asarray(lres.resid_bounds)])
+        if not lres.converged:
+            info.setdefault("warnings", []).append(
+                f"{prefix} retired UNCONVERGED after {int(lres.n_restart)} "
+                f"restarts (max_restarts={max_restarts}); eigenpairs are "
+                f"the best Ritz approximations at exit")
         lam, Y = lres.evals, lres.evecs
         # Lanczos returns wanted-first ordering; sort ascending like TD/TT
         order = jnp.argsort(lam)

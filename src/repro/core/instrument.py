@@ -1,0 +1,28 @@
+"""Dispatch accounting shared by the solver hot paths.
+
+``core.lanczos``, ``core.sbr``, and ``dist.eigensolver`` each expose a
+module-level ``dispatch_count()`` / ``reset_dispatch_count()`` pair so the
+regression tests can pin "this sweep is O(1) host dispatches" against the
+per-panel / per-matvec baselines. The counting semantics live here, once:
+every invocation routed through a :class:`DispatchCounter` counts 1 jitted
+program dispatch (when tracing inside an outer jit the count reflects the
+trace, which is exactly the number of programs the host would issue).
+"""
+from __future__ import annotations
+
+
+class DispatchCounter:
+    """Callable counter: ``counter(fn, *args)`` counts 1 and calls ``fn``."""
+
+    def __init__(self) -> None:
+        self._count = 0
+
+    def count(self) -> int:
+        return self._count
+
+    def reset(self) -> None:
+        self._count = 0
+
+    def __call__(self, fn, *args, **kwargs):
+        self._count += 1
+        return fn(*args, **kwargs)

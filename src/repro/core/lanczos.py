@@ -27,6 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .instrument import DispatchCounter
 from .operators import ExplicitC, ImplicitC, Operator, apply_op, op_dim
 
 
@@ -144,31 +145,27 @@ def _restart_math(V: jax.Array, T: jax.Array, beta_m: jax.Array,
     return theta, S, resid, V_restart, T_new, all_conv
 
 
-# ---------------------------------------------------------------------------
 # dispatch accounting (observability + the regression test's hook)
-# ---------------------------------------------------------------------------
+_dispatch = DispatchCounter()
 
-_DISPATCH = {"count": 0}
-
-
-def dispatch_count() -> int:
-    """Host->device dispatches issued by ``lanczos_solve`` since the last
-    :func:`reset_dispatch_count` (each jitted-program invocation counts 1)."""
-    return _DISPATCH["count"]
-
-
-def reset_dispatch_count() -> None:
-    _DISPATCH["count"] = 0
-
-
-def _dispatch(fn, *args, **kwargs):
-    _DISPATCH["count"] += 1
-    return fn(*args, **kwargs)
+#: host->device dispatches issued by ``lanczos_solve`` since the last
+#: ``reset_dispatch_count()`` (each jitted-program invocation counts 1)
+dispatch_count = _dispatch.count
+reset_dispatch_count = _dispatch.reset
 
 
 def default_subspace(s: int, n: int) -> int:
     """ARPACK-style default NCV: m in [2s, n), at least 20."""
     return int(min(max(2 * s + 1, 20), n - 1))
+
+
+def restart_schedule(s: int, m: int) -> tuple:
+    """(keep, per_restart) of the thick-restart drivers below: each restart
+    keeps ``keep`` Ritz pairs and extends by ``per_restart = m - keep``
+    matvecs. The single source of truth — the cost model's dispatch/restart
+    estimate (``analysis.variant_model``) derives from it too."""
+    keep = min(s + max((m - s) // 2, 1), m - 2)
+    return keep, max(m - keep, 1)
 
 
 def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
@@ -201,7 +198,7 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
     if m is None:
         m = default_subspace(s, n)
     assert 2 * s < m + 1 <= n + 1, (s, m, n)
-    keep = min(s + max((m - s) // 2, 1), m - 2)
+    keep, _ = restart_schedule(s, m)
     segment = _make_segment(op, use_kernel)
     eps = float(jnp.finfo(dtype).eps)
     tol_eff = tol if tol > 0.0 else eps
@@ -256,7 +253,7 @@ def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
     n = v0.shape[0]
     dtype = v0.dtype
     eps = jnp.finfo(dtype).eps
-    keep = min(s + max((m - s) // 2, 1), m - 2)
+    keep, _ = restart_schedule(s, m)
 
     V0 = jnp.zeros((n, m + 1), dtype).at[:, 0].set(v0 / jnp.linalg.norm(v0))
     T0 = jnp.zeros((m + 1, m + 1), dtype)

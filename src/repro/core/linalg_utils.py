@@ -139,6 +139,30 @@ def apply_wy_two_sided(C: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
     return symmetrize(out)
 
 
+def wy_syr2k_panel(C: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
+    """The Z panel of the SYR2K-form two-sided update (LAPACK DSYRDB).
+
+    With X = C V and S = T^T (V^T X) T (symmetric because C is),
+
+        Q^T C Q = C - Z V^T - V Z^T,   Z = X T - (1/2) V S,
+
+    so the two-sided compact-WY update collapses to ONE rank-2w SYR2K
+    against the (n, w) panels (V, Z) — the form both the fused single-host
+    sweep (``core.sbr.reduce_to_band``, via ``kernels/syr2k`` on TPU) and
+    the distributed sweep (``dist.sharded_la``) consume.
+    """
+    X = C @ V
+    S = T.T @ (V.T @ X) @ T
+    return X @ T - 0.5 * (V @ S)
+
+
+def apply_wy_two_sided_syr2k(C: jax.Array, V: jax.Array,
+                             T: jax.Array) -> jax.Array:
+    """Q^T C Q for symmetric C via the SYR2K form (see `wy_syr2k_panel`)."""
+    Z = wy_syr2k_panel(C, V, T)
+    return symmetrize(C - Z @ V.T - V @ Z.T)
+
+
 def givens(a: jax.Array, b: jax.Array):
     """Return (c, s) with [c s; -s c]^T applied to rows mixing (a; b) -> (r; 0).
 

@@ -1,13 +1,23 @@
 """TT1/TT2 — two-stage tridiagonalization (SBR toolbox analogue).
 
 Stage 1 (``reduce_to_band``, DSYRDB): dense -> band of width w via panel QR +
-compact-WY two-sided updates. All flops are GEMMs (the BLAS-3 / MXU-friendly
-profile that motivates variant TT in the paper). Q1 is accumulated
-*explicitly* by GEMMs, as the paper describes (two matrix products per
-panel). The updates run on a SHRINKING trailing window (a small static
-ladder of ``dynamic_slice`` panels) instead of full-(n, n) masked updates:
-the two-sided reflector acts as identity outside the trailing block, so
-the window version does ~1/3 of the full-matrix flops.
+compact-WY two-sided updates, compiled as ONE program: the panel
+factorization is a single fused launch (``kernels/house_panel`` — Pallas on
+TPU, the identical jnp expression elsewhere), the trailing update runs in
+SYR2K form (one rank-2w update per panel, ``kernels/syr2k`` on TPU), and
+the sweep over panels is a ``lax.fori_loop`` over a small static
+shrinking-window ladder — so a full reduction costs O(1) host dispatches
+instead of the O(n/w) round trips of the per-panel host loop (kept as
+``reduce_to_band_stepwise``, the baseline of ``benchmarks/bench_sbr.py``;
+``dispatch_count()`` exposes the difference to the regression tests).
+All flops are GEMMs (the BLAS-3 / MXU-friendly profile that motivates
+variant TT in the paper) and Q1 is accumulated *explicitly* by GEMMs, as
+the paper describes (two matrix products per panel). Stage 1 is NOT cheap:
+once the bulge chase went wavefront (PR 4) it is the dominant stage of a
+TT solve, which is why the sweep structure above matters. The window
+ladder is auto-sized by :func:`default_n_chunks` — at small n the ladder's
+extra windows cost more than the ~1/3 flop saving buys (BENCH_sbr measured
+speedup_tt1 = 0.52 at n=128/w=8), so small problems run ``n_chunks=1``.
 
 Stage 2 (``band_to_tridiag``, DSBRDT): band -> tridiagonal via Givens bulge
 chasing over COMPACT band storage (see ``core.band_storage``), scheduled in
@@ -35,17 +45,19 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.house_panel.ops import house_panel
 from repro.kernels.rot_apply.ops import rot_apply
 
 from .band_storage import clean_band, pack_band, unpack_band
+from .instrument import DispatchCounter
 from .linalg_utils import (
-    apply_wy_two_sided,
+    apply_wy_two_sided_syr2k,
     extract_tridiag,
     givens,
-    qr_wy_masked,
     rotate_cols,
     rotate_rows,
     symmetrize,
+    wy_syr2k_panel,
 )
 
 
@@ -58,6 +70,16 @@ class BandResult(NamedTuple):
         return unpack_band(self.Wb)
 
 
+# dispatch accounting (observability + the regression tests' hook): the
+# counter makes "fused sweep = O(1), stepwise loop = O(n/w)" testable
+_dispatch = DispatchCounter()
+
+#: host->device dispatches issued by ``reduce_to_band`` /
+#: ``reduce_to_band_stepwise`` since the last ``reset_dispatch_count()``
+dispatch_count = _dispatch.count
+reset_dispatch_count = _dispatch.reset
+
+
 def _chunk_bounds(n_panels: int, n_chunks: int):
     """Static panel ranges for the shrinking-window ladder."""
     n_chunks = max(1, min(n_chunks, n_panels))
@@ -66,31 +88,52 @@ def _chunk_bounds(n_panels: int, n_chunks: int):
             if bounds[c + 1] > bounds[c]]
 
 
+def _n_panels(n: int, w: int) -> int:
+    return len(range(0, max(n - w - 1, 0), w))
+
+
+#: the window ladder is a measured pessimization when the problem is small
+#: or the windows are panel-starved (the extra window programs cost more
+#: than the ~1/3 flop saving buys): BENCH_sbr measured speedup_tt1 = 0.52
+#: at n=128/w=8 and 0.66 at n=256/w=32 (6 panels over 4 windows), vs 3.4x
+#: at n=256/w=8 (30 panels) and 1.8-2.5x everywhere at n=512
+_WINDOW_MIN_N = 256        # below: never ladder
+_WINDOW_AUTO_N = 512       # at/above: always ladder
+_WINDOW_MIN_PANELS = 16    # in between: need enough panels to amortize
+
+
+def default_n_chunks(n: int, w: int) -> int:
+    """Auto-sized shrinking-window ladder: up to 4 trailing windows once
+    the problem is big enough (``n >= 512``, or ``n >= 256`` with at least
+    16 panels); 1 (full-matrix updates) otherwise."""
+    n_panels = _n_panels(n, w)
+    if n_panels == 0:
+        return 1
+    if n >= _WINDOW_AUTO_N or (n >= _WINDOW_MIN_N
+                               and n_panels >= _WINDOW_MIN_PANELS):
+        return min(4, n_panels)
+    return 1
+
+
+def _wy_rank2_update(Mt: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
+    """SYR2K-form two-sided update; the rank-2w product goes through the
+    fused ``kernels/syr2k`` Pallas kernel on TPU (one HBM round trip per
+    C tile) and the identical jnp expression elsewhere."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels.syr2k.ops import syr2k
+        Z = wy_syr2k_panel(Mt, V, T)
+        return symmetrize(syr2k(Mt, V, Z, alpha=-1.0))
+    return apply_wy_two_sided_syr2k(Mt, V, T)
+
+
 @partial(jax.jit, static_argnames=("w", "n_chunks"))
-def reduce_to_band(C: jax.Array, w: int = 32,
-                   n_chunks: int | None = None) -> BandResult:
-    """Stage 1: Q1^T C Q1 = W with bandwidth w. Panel QR + WY updates.
-
-    Panels are grouped into a small static ladder of trailing windows: the
-    reflectors of panel k are masked below row ``(k+1) w``, so the two-sided
-    update H M H acts as identity on everything before the window — the
-    (S, S) trailing slice is the only data the update can change (the
-    already-reduced off-window entries are zero to machine precision).
-    Within one window the panel loop is a fori_loop with FIXED-shape bodies
-    (one compile per window size, ``n_chunks`` sizes total); ``n_chunks=1``
-    reproduces the old full-(n, n) masked behavior and is kept as the
-    baseline for ``benchmarks/bench_sbr.py``.
-
-    Returns the band in packed (w+1, n) storage (``BandResult.Wb``) plus the
-    explicit Q1.
-    """
+def _reduce_to_band_program(C: jax.Array, w: int, n_chunks: int) -> BandResult:
+    """The whole stage-1 sweep as ONE compiled program (see reduce_to_band)."""
     n = C.shape[0]
     Q1_0 = jnp.eye(n, dtype=C.dtype)
-    n_panels = len(range(0, max(n - w - 1, 0), w))
+    n_panels = _n_panels(n, w)
     if n_panels == 0:
         return BandResult(Wb=pack_band(C, w, symmetrize=True), Q1=Q1_0)
-    if n_chunks is None:
-        n_chunks = min(4, n_panels)
 
     M, Q1 = C, Q1_0
     for p0, p1 in _chunk_bounds(n_panels, n_chunks):
@@ -101,8 +144,8 @@ def reduce_to_band(C: jax.Array, w: int = 32,
             Mt, Q1t = carry
             c0 = p * w - o                       # panel start inside window
             E = jax.lax.dynamic_slice(Mt, (0, c0), (S, w))
-            V, T, _ = qr_wy_masked(E, c0 + w)
-            Mt = apply_wy_two_sided(Mt, V, T)
+            V, T = house_panel(E, c0 + w)        # one fused panel launch
+            Mt = _wy_rank2_update(Mt, V, T)
             # explicit Q1 accumulation (two GEMMs per panel, paper Sec. 2.2)
             Q1t = Q1t - ((Q1t @ V) @ T) @ V.T
             return Mt, Q1t
@@ -113,6 +156,61 @@ def reduce_to_band(C: jax.Array, w: int = 32,
         M = jax.lax.dynamic_update_slice(M, Mt, (o, o))
         Q1 = jax.lax.dynamic_update_slice(Q1, Q1t, (0, o))
     return BandResult(Wb=pack_band(M, w, symmetrize=True), Q1=Q1)
+
+
+def reduce_to_band(C: jax.Array, w: int = 32,
+                   n_chunks: int | None = None) -> BandResult:
+    """Stage 1: Q1^T C Q1 = W with bandwidth w. Panel QR + WY updates.
+
+    The ENTIRE sweep — panel factorization (``kernels/house_panel``),
+    T-build, SYR2K-form trailing update, Q1 accumulation — is one jitted
+    program: panels are grouped into a small static ladder of trailing
+    windows (the reflectors of panel k are masked below row ``(k+1) w``,
+    so the two-sided update acts as identity before the window and the
+    (S, S) trailing slice is the only data it can change), and within one
+    window the panel loop is a ``fori_loop`` with FIXED-shape bodies (one
+    compile per window size, ``n_chunks`` sizes total). ``n_chunks=None``
+    auto-sizes the ladder via :func:`default_n_chunks`; ``n_chunks=1``
+    is the full-(n, n) masked behavior (and the right choice at small n).
+
+    Returns the band in packed (w+1, n) storage (``BandResult.Wb``) plus the
+    explicit Q1. Costs O(1) host dispatches per sweep (``dispatch_count()``;
+    the per-panel host loop survives as :func:`reduce_to_band_stepwise`).
+    """
+    if n_chunks is None:
+        n_chunks = default_n_chunks(C.shape[0], w)
+    return _dispatch(_reduce_to_band_program, C, w=w, n_chunks=n_chunks)
+
+
+# per-panel jitted pieces of the stepwise baseline (compile once each)
+_jit_slice_cols = jax.jit(
+    lambda M, c0, w: jax.lax.dynamic_slice(M, (0, c0), (M.shape[0], w)),
+    static_argnames=("w",))
+_jit_house_panel = jax.jit(house_panel)
+_jit_wy_update = jax.jit(apply_wy_two_sided_syr2k)
+_jit_wy_right = jax.jit(lambda Q, V, T: Q - ((Q @ V) @ T) @ V.T)
+_jit_pack = jax.jit(lambda M, w: pack_band(M, w, symmetrize=True),
+                    static_argnames=("w",))
+
+
+def reduce_to_band_stepwise(C: jax.Array, w: int = 32) -> BandResult:
+    """The old per-panel HOST loop: one panel slice + QR + trailing update +
+    Q1 accumulation dispatched per panel (O(n/w) host round trips).
+
+    Numerically the same sweep as :func:`reduce_to_band` with
+    ``n_chunks=1``; kept as the dispatch-overhead baseline for
+    ``benchmarks/bench_sbr.py --quick`` and the dispatch-count regression
+    tests — do not use it in production paths.
+    """
+    n = C.shape[0]
+    M, Q1 = C, jnp.eye(n, dtype=C.dtype)
+    for k in range(_n_panels(n, w)):
+        c0 = k * w
+        E = _dispatch(_jit_slice_cols, M, jnp.asarray(c0), w)
+        V, T = _dispatch(_jit_house_panel, E, jnp.asarray(c0 + w))
+        M = _dispatch(_jit_wy_update, M, V, T)
+        Q1 = _dispatch(_jit_wy_right, Q1, V, T)
+    return BandResult(Wb=_dispatch(_jit_pack, M, w), Q1=Q1)
 
 
 class TridiagFromBandResult(NamedTuple):

@@ -12,9 +12,10 @@ KE (``solve_ke_distributed``):
 
 TT (``solve_tt_distributed``, the ELPA2-style two-stage path):
   GS1/GS2 as above, then
-  TT1  dense -> band of width w              (replicated panel QR of the
-       O(n w) panel + distributed SYR2K trailing update + distributed
-       explicit Q1 accumulation — all BLAS-3, see ``dist_reduce_to_band``)
+  TT1  dense -> band of width w              (ONE shard_map-ped program
+       for the whole sweep: all_gather'd panel -> fused compact-WY QR ->
+       sharded SYR2K trailing update + Q1 accumulation, all BLAS-3 and
+       O(1) host dispatches — see ``dist_reduce_to_band``)
   TT2  band -> tridiagonal                   (replicated wavefront bulge
        chase on packed O(n w) band storage; the rotation stream is
        recorded, not accumulated — Q1 never leaves the mesh and no
@@ -37,12 +38,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.band_storage import pack_band
+from repro.core.instrument import DispatchCounter
 from repro.core.lanczos import default_subspace, lanczos_solve
-from repro.core.linalg_utils import qr_wy_masked, symmetrize
-from repro.core.sbr import apply_q2, band_chase
+from repro.core.linalg_utils import symmetrize
+from repro.core.sbr import (_jit_house_panel, _jit_pack, _jit_slice_cols,
+                            _n_panels, apply_q2, band_chase)
 from repro.core.tridiag_eig import eigh_tridiag_selected
-from .sharded_la import (_row_spec, _row_sharded, dist_apply_wy_right,
+from .sharded_la import (_n_row_shards, _row_spec, _row_sharded,
+                         band_sweep_program, dist_apply_wy_right,
                          dist_apply_wy_two_sided, dist_cholesky,
                          dist_panel_matmul, dist_symv, dist_trsm_left,
                          dist_trsm_left_t)
@@ -124,53 +127,95 @@ def solve_ke_distributed(
 
 # -------------------------------------------------------- TT pipeline -----
 
-# fixed-shape helpers shared by every panel iteration (compile once each):
-# column-slice with a traced start, and the masked panel QR.
-_slice_cols = jax.jit(
-    lambda M, c0, w: jax.lax.dynamic_slice(M, (0, c0), (M.shape[0], w)),
-    static_argnames=("w",))
-_jit_qr_masked = jax.jit(qr_wy_masked)
+# the per-panel jitted pieces of the STEPWISE baseline (column slice, fused
+# panel QR, band pack) come from core.sbr — one set of helpers serves both
+# stepwise baselines. ``_jit_pack`` also packs the replicated band into
+# compact (w+1, n) storage for the TT2 wavefront chase.
 _jit_band_clean = jax.jit(
     lambda M, w: symmetrize(jnp.where(
         jnp.abs(jnp.arange(M.shape[0])[:, None]
                 - jnp.arange(M.shape[0])[None, :]) <= w, M, 0.0)),
     static_argnames=("w",))
-# pack the replicated band into compact (w+1, n) storage for the TT2
-# wavefront chase (see core.band_storage / core.sbr.band_to_tridiag)
-_jit_pack_band = jax.jit(lambda M, w: pack_band(M, w, symmetrize=True),
-                         static_argnames=("w",))
+
+
+# dispatch accounting for the TT1 sweep, mirroring ``core.lanczos`` /
+# ``core.sbr``: each jitted-program invocation counts 1, so the regression
+# tests can pin "fused sweep = O(1), per-panel loop = O(n/w)"
+_dispatch = DispatchCounter()
+
+#: host->device dispatches issued by ``dist_reduce_to_band`` (and the
+#: stepwise baseline) since the last ``reset_dispatch_count()``
+dispatch_count = _dispatch.count
+reset_dispatch_count = _dispatch.reset
 
 
 def dist_reduce_to_band(mesh, C, w: int = 8):
     """TT1: distributed Q1^T C Q1 = W (bandwidth w) on row-sharded storage.
 
-    Per panel: the (n, w) panel is gathered and QR-factored replicated
-    (it is O(n w) — tiny next to the O(n^2 w) trailing update), then the
-    two-sided compact-WY update runs as a distributed panel-matmul +
-    ``dist_syr2k`` and Q1 is accumulated in place on the mesh with
-    ``dist_apply_wy_right``. Every heavy flop is a local GEMM on a row
-    block; the only data that moves is the O(n w) panel per iteration.
+    The ENTIRE sweep is ONE ``shard_map``-ped jitted program
+    (``sharded_la.band_sweep_program``): panel assembly by ``all_gather``,
+    replicated compact-WY factorization (``kernels/house_panel``), the
+    SYR2K-form sharded trailing update, and the in-place Q1 accumulation
+    all run inside a single ``lax.fori_loop`` — O(1) host dispatches per
+    reduction where the old per-panel host loop
+    (:func:`dist_reduce_to_band_stepwise`) paid a Python round trip plus a
+    fresh ``shard_map`` dispatch per panel, which ``BENCH_variant_race``
+    measured as 13.4s of a 14.3s solve at n=128 on 8 host devices.
 
-    Returns ``(W, Q1)`` both row-block-sharded on the mesh. Storage note:
-    W stays in full dense (n, n) form while mesh-resident (row-block
-    sharding needs the rectangular layout); ``solve_tt_distributed`` packs
-    it into compact (w+1, n) band storage right before the replicated TT2
-    wavefront chase (see ``core.band_storage``).
+    Returns ``(W, Q1)`` both row-block-sharded on the mesh; W is
+    band-masked (off-band entries exactly zero). Storage note: W stays in
+    full dense (n, n) form while mesh-resident (row-block sharding needs
+    the rectangular layout); ``solve_tt_distributed`` packs it into compact
+    (w+1, n) band storage — averaging the triangles — right before the
+    replicated TT2 wavefront chase (see ``core.band_storage``). When n is
+    not divisible by the row-shard count R, C is embedded in a
+    block-diagonal ``[[C, 0], [0, I]]`` of the next multiple of R — the
+    padding rows carry identity reflectors (their panel tails are zero)
+    and identity Q1/W blocks, so the sliced-back result is exactly the
+    reduction of C and the sweep STAYS one fused program for every n
+    (matching the 2-dispatch TT1 the cost model charges; ``shard_map``
+    could not run a per-panel fallback on uneven shards anyway).
+    """
+    n = C.shape[0]
+    R = max(_n_row_shards(mesh), 1)
+    n_pad = -(-n // R) * R
+    if n_pad != n:
+        idx = jnp.arange(n, n_pad)
+        C = jnp.zeros((n_pad, n_pad), C.dtype).at[:n, :n].set(C) \
+            .at[idx, idx].set(1.0)
+    row_sh = _row_sharded(mesh, C)
+    M = jax.device_put(C, row_sh)
+    Q1 = jax.device_put(jnp.eye(n_pad, dtype=C.dtype), row_sh)
+    sweep = band_sweep_program(mesh, n_pad, w, jnp.dtype(C.dtype).name)
+    W, Q1 = _dispatch(sweep, M, Q1)
+    if n_pad != n:
+        W, Q1 = W[:n, :n], Q1[:n, :n]
+    return W, Q1
+
+
+def dist_reduce_to_band_stepwise(mesh, C, w: int = 8):
+    """The old per-panel HOST loop: gather panel -> replicated QR ->
+    ``dist_apply_wy_two_sided`` / ``dist_apply_wy_right``, one fresh set of
+    dispatches (and two host device_put round trips) per panel.
+
+    Kept ONLY as the dispatch-overhead baseline for the regression tests —
+    do not use it on the hot path (``dist_reduce_to_band`` handles every n,
+    padding to the shard multiple when needed).
     """
     n = C.shape[0]
     row_sh = _row_sharded(mesh, C)
     rep = NamedSharding(mesh, P(None, None))
     M = jax.device_put(C, row_sh)
     Q1 = jax.device_put(jnp.eye(n, dtype=C.dtype), row_sh)
-    n_panels = len(range(0, max(n - w - 1, 0), w))
-    for k in range(n_panels):
+    for k in range(_n_panels(n, w)):
         c0 = k * w
-        E = jax.device_put(_slice_cols(M, c0, w), rep)
-        V, T, _ = _jit_qr_masked(E, jnp.asarray(c0 + w))
+        E = jax.device_put(_dispatch(_jit_slice_cols, M,
+                             jnp.asarray(c0), w), rep)
+        V, T = _dispatch(_jit_house_panel, E, jnp.asarray(c0 + w))
         V = jax.device_put(V, rep)
-        M = dist_apply_wy_two_sided(mesh, M, V, T)
-        Q1 = dist_apply_wy_right(mesh, Q1, V, T)
-    W = jax.device_put(_jit_band_clean(M, w), row_sh)
+        M = _dispatch(dist_apply_wy_two_sided, mesh, M, V, T)
+        Q1 = _dispatch(dist_apply_wy_right, mesh, Q1, V, T)
+    W = jax.device_put(_dispatch(_jit_band_clean, M, w), row_sh)
     return W, Q1
 
 
@@ -212,7 +257,7 @@ def solve_tt_distributed(
     rep = NamedSharding(mesh, P(None, None))
     W_rep = jax.device_put(W, rep)
     chase = timed("TT2", lambda wr: band_chase(
-        _jit_pack_band(wr, band_width), band_width), W_rep)
+        _jit_pack(wr, band_width), band_width), W_rep)
 
     # TT3: selected eigenpairs of the tridiagonal (replicated, O(n s))
     ks = jnp.arange(s) if which == "smallest" else jnp.arange(n - s, n)

@@ -175,6 +175,91 @@ def dist_apply_wy_right(mesh, M, V, T):
                      out_specs=P(rs, None))(M, V, T)
 
 
+# ------------------------------------------------- fused band-reduction ---
+
+def _row_axes(mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+@functools.lru_cache(maxsize=None)
+def band_sweep_program(mesh, n: int, w: int, dtype_name: str):
+    """ONE ``shard_map``-ped jitted program for the ENTIRE stage-1 sweep.
+
+    The dispatch-light TT1: every panel iteration lives inside a
+    ``lax.fori_loop`` in a single ``shard_map`` region, so a full reduction
+    is one host dispatch instead of O(n/w) per-panel host round trips.
+    Per panel, on each device's (n/R, n) row block:
+
+      * the (n, w) panel columns are assembled by ONE ``all_gather`` over
+        the row axes and factored to compact-WY (Y, T) via
+        ``kernels/house_panel`` — replicated compute, O(n w^2), which makes
+        the gather double as the panel broadcast (every shard ends up
+        holding the same (Y, T) with zero extra collectives);
+      * the trailing update runs in SYR2K form: X_blk = C_blk Y is local,
+        the (w, w) coupling V^T X is one ``psum``, and the rank-2w update
+        plus the explicit Q1 accumulation are local GEMMs (one more
+        ``all_gather`` ships the O(n w) Z panel).
+
+    Requires n divisible by the row-shard count (``dist_reduce_to_band``
+    pads C to the shard multiple with an identity block otherwise, so the
+    fused program serves every n). Returns a jitted
+    ``(M, Q1) -> (W, Q1)`` callable on row-block-sharded storage; W comes
+    back band-masked (|i-j| > w zeroed) but un-symmetrized — the packer
+    averages the triangles when the band is replicated for TT2.
+    """
+    from repro.core.sbr import _n_panels
+    from repro.kernels.house_panel.ops import house_panel
+
+    rs = _row_spec(mesh)
+    row_axes = _row_axes(mesh)
+    ax = row_axes if len(row_axes) > 1 else row_axes[0]
+    R = max(_n_row_shards(mesh), 1)
+    assert n % R == 0, (n, R)
+    nloc = n // R
+    n_panels = _n_panels(n, w)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dtype = jnp.dtype(dtype_name)
+
+    def local(m_blk, q_blk):
+        # global row offset of this shard (row axes merge in mesh order)
+        shard = jnp.zeros((), jnp.int32)
+        for a in row_axes:
+            shard = shard * sizes[a] + jax.lax.axis_index(a)
+        r0 = shard * nloc
+
+        def body(k, carry):
+            m_blk, q_blk = carry
+            c0 = k * w
+            e_blk = jax.lax.dynamic_slice(m_blk, (0, c0), (nloc, w))
+            E = jax.lax.all_gather(e_blk, ax, axis=0, tiled=True)
+            V, T = house_panel(E, c0 + w)
+            X_blk = m_blk @ V                                   # (nloc, w)
+            V_blk = jax.lax.dynamic_slice(
+                V, (r0, jnp.zeros((), r0.dtype)), (nloc, w))
+            W_c = jax.lax.psum(V_blk.T @ X_blk, ax)             # (w, w)
+            S = T.T @ W_c @ T
+            Z_blk = X_blk @ T - 0.5 * (V_blk @ S)
+            Z = jax.lax.all_gather(Z_blk, ax, axis=0, tiled=True)
+            m_blk = m_blk - Z_blk @ V.T - V_blk @ Z.T
+            # explicit Q1 accumulation (two local GEMMs per panel)
+            q_blk = q_blk - ((q_blk @ V) @ T) @ V.T
+            return m_blk, q_blk
+
+        if n_panels:
+            m_blk, q_blk = jax.lax.fori_loop(0, n_panels, body,
+                                             (m_blk, q_blk))
+        gi = r0 + jnp.arange(nloc, dtype=jnp.int32)[:, None]
+        dist_band = jnp.abs(gi - jnp.arange(n, dtype=jnp.int32)[None, :])
+        m_blk = jnp.where(dist_band <= w, m_blk, jnp.zeros((), dtype))
+        return m_blk, q_blk
+
+    sweep = shard_map(local, mesh=mesh,
+                      in_specs=(P(rs, None), P(rs, None)),
+                      out_specs=(P(rs, None), P(rs, None)),
+                      check_rep=False)
+    return jax.jit(sweep)
+
+
 # ----------------------------------------------------- panel factorizations
 
 def _n_row_shards(mesh) -> int:

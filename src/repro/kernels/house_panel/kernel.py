@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused compact-WY panel factorization (DGEQRT analogue).
+
+One launch factors a whole (rows, b) band-reduction panel into (V, T): the
+b Householder reflectors, the in-panel trailing updates, and the T-matrix
+recurrence all run over a single VMEM-resident panel instead of issuing
+b reflector-sized XLA ops per panel. This is the stage-1 companion of
+``kernels/rot_apply``: the band reduction's panel QR becomes one kernel
+launch, so the full sweep is O(1) dispatches end to end.
+
+Layout: the panel rides in as one (P, b) block (P = rows padded to the
+sublane multiple, b = bandwidth <= 128 — a single lane face, like the
+(bm, k) panels of ``kernels/syr2k``). ``row_start`` is a scalar in SMEM:
+reflector j pivots at global row ``row_start + j`` and the masks below are
+how the kernel stays fixed-shape for every panel of the sweep (the pivot
+is traced, the shapes never change). The reflector loop is unrolled at
+trace time (b is static), every step a handful of (P, b)/(b, b) VPU/MXU
+ops — no dynamic column indexing anywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _house_panel_kernel(rs_ref, e_ref, v_ref, t_ref):
+    P, b = e_ref.shape
+    dtype = e_ref.dtype
+    rs = rs_ref[0]
+    R = e_ref[...]
+    V = jnp.zeros((P, b), dtype)
+    T = jnp.zeros((b, b), dtype)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (P, 1), 0)
+    colsP = jax.lax.broadcasted_iota(jnp.int32, (P, b), 1)
+    rows_b = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols_b = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    one = jnp.ones((), dtype)
+
+    for j in range(b):
+        pivot = rs + j
+        x = jnp.sum(jnp.where(colsP == j, R, 0.0), axis=1, keepdims=True)
+        xm = jnp.where(rows >= pivot, x, 0.0)
+        alpha = jnp.sum(jnp.where(rows == pivot, x, 0.0))
+        sigma = jnp.maximum(jnp.sum(xm * xm) - alpha * alpha, 0.0)
+        safe = sigma > 0.0
+        norm_x = jnp.sqrt(alpha * alpha + sigma)
+        sgn = jnp.where(alpha >= 0.0, one, -one)
+        beta = jnp.where(safe, -sgn * norm_x, alpha)
+        denom = jnp.where(safe, alpha - beta, one)
+        tau = jnp.where(safe, (beta - alpha) / jnp.where(safe, beta, one),
+                        0.0)
+        # v: zeros above the pivot, 1 at it, xm/denom below (identity
+        # reflector when the tail is numerically zero, tau = 0)
+        v = jnp.where(rows > pivot, xm / denom, 0.0)
+        v = jnp.where(rows == pivot, one, v)
+        v = jnp.where(safe, v, jnp.where(rows == pivot, one, 0.0))
+        # trailing update of the panel: R -= tau v (v^T R)
+        proj = jnp.sum(v * R, axis=0, keepdims=True)          # (1, b)
+        R = R - tau * (v * proj)
+        # T recurrence: T[:j, j] = -tau T[:j, :j] (V^T v); T[j, j] = tau.
+        # V/T only hold columns < j, so full-width masked products equal
+        # the sliced ones.
+        z = jnp.sum(V * v, axis=0)                            # (b,)
+        tcol = -tau * jax.lax.dot(T, z[:, None],
+                                  preferred_element_type=dtype)  # (b, 1)
+        T = jnp.where(cols_b == j, tcol, T)
+        T = jnp.where((rows_b == j) & (cols_b == j), tau, T)
+        V = jnp.where(colsP == j, v, V)
+
+    v_ref[...] = V
+    t_ref[...] = T
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def house_panel_pallas(E: jax.Array, row_start: jax.Array,
+                       interpret: bool = True):
+    """Factor E[row_start:, :] into compact-WY (V, T) in ONE kernel launch.
+
+    E is (P, b) with P a sublane multiple (the ops wrapper pads);
+    ``row_start`` is a (1,) int32. Returns (V (P, b), T (b, b)).
+    """
+    P, b = E.shape
+    return pl.pallas_call(
+        _house_panel_kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((P, b), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((P, b), lambda: (0, 0)),
+            pl.BlockSpec((b, b), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, b), E.dtype),
+            jax.ShapeDtypeStruct((b, b), E.dtype),
+        ],
+        interpret=interpret,
+    )(row_start, E)

@@ -1,0 +1,53 @@
+"""Public wrapper for the fused compact-WY panel factorization.
+
+``house_panel`` is the stage-1 panel unit of the band reduction: a whole
+(rows, b) panel goes to compact-WY form (V, T) in ONE device operation. On
+TPU it lowers to the Pallas kernel (panel resident in VMEM, reflector loop
+unrolled); elsewhere it falls back to the identical pure-jnp expression, so
+the panel sweep stays a single traceable program on every backend —
+including inside ``lax.fori_loop`` bodies (``row_start`` may be traced),
+under ``vmap`` in ``core.batched``, and inside the ``shard_map``-ped
+distributed sweep of ``dist.sharded_la``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import house_panel_pallas
+from .ref import house_panel_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def house_panel(E: jax.Array, row_start,
+                force_kernel: bool = False,
+                force_interpret: bool | None = None):
+    """Compact-WY factorization of E[row_start:, :] — returns (V, T).
+
+    E: (rows, b) full-height panel; reflector j pivots at row
+    ``row_start + j`` (traced ok) and rows above pass through untouched.
+    V is (rows, b) with zeros above each pivot, T is (b, b) upper
+    triangular; Q = I - V T V^T. Pivots past the panel end (the rows < b
+    tail panel) yield identity reflectors (tau = 0).
+
+    Dispatches to the Pallas kernel on TPU (or when ``force_kernel=True``,
+    using interpret mode off-TPU); otherwise the pure-jnp oracle. Rows are
+    padded to the sublane multiple internally.
+    """
+    use_kernel = force_kernel or _on_tpu()
+    if not use_kernel:
+        return house_panel_ref(E, row_start)
+    rows, b = E.shape
+    pad = (-rows) % 8
+    if pad:
+        E = jnp.pad(E, ((0, pad), (0, 0)))
+    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+    rs = jnp.asarray(row_start, jnp.int32).reshape((1,))
+    V, T = house_panel_pallas(E, rs, interpret=interpret)
+    return V[:rows], T
+
+
+__all__ = ["house_panel", "house_panel_ref"]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused compact-WY panel factorization.
+
+``house_panel_ref(E, row_start)`` factors the sub-panel ``E[row_start:, :]``
+of a full-height (rows, b) panel into compact-WY form: reflector ``j``
+pivots at row ``row_start + j`` and only touches rows ``>= row_start``, so
+
+    Q = I - V T V^T   is orthogonal and   (Q^T E)[row_start + j + 1:, j] = 0.
+
+This is exactly ``linalg_utils.qr_wy_masked`` (the LAPACK DGEQRT panel op of
+the band reduction) minus the R output the band sweep never consumes — the
+two-sided trailing update regenerates the panel columns from (V, T) anyway.
+``row_start`` may be traced, so the oracle drops straight into ``fori_loop``
+panel sweeps; reflectors whose pivot falls past the panel (the rows < b
+tail panel) come out as identity (tau = 0) and the shapes stay (rows, b) /
+(b, b) regardless.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linalg_utils import householder_masked
+
+
+def house_panel_ref(E: jax.Array, row_start) -> tuple[jax.Array, jax.Array]:
+    """Compact-WY factorization of E[row_start:, :]: returns (V, T).
+
+    E is (rows, b); V is (rows, b) unit "masked lower trapezoidal" (zeros
+    above each pivot row), T is (b, b) upper triangular, and
+    I - V T V^T is the orthogonal panel factor.
+    """
+    rows, b = E.shape
+    V = jnp.zeros((rows, b), E.dtype)
+    T = jnp.zeros((b, b), E.dtype)
+    R = E
+    for j in range(b):
+        v, tau, _ = householder_masked(R[:, j], row_start + j)
+        R = R - tau * jnp.outer(v, v @ R)
+        V = V.at[:, j].set(v)
+        if j > 0:
+            z = V[:, :j].T @ v
+            T = T.at[:j, j].set(-tau * (T[:j, :j] @ z))
+        T = T.at[j, j].set(tau)
+    return V, T

@@ -283,6 +283,78 @@ def _run_tt_parity(ndev, mesh_shape, n, s, w):
     assert "DIST_TT_OK" in out.stdout, out.stdout + out.stderr[-3000:]
 
 
+def test_distributed_tt1_fused_sweep_two_device():
+    """Fast lane: the fused one-program ``dist_reduce_to_band`` on a
+    2-device (2, 1) mesh — data=2, so the row collectives are real —
+    (a) is numerically at parity with the local
+    ``reduce_to_band`` band, (b) satisfies the reduction invariants, and
+    (c) issues O(1) host dispatches per sweep (budget: 3) — while the
+    stepwise per-panel baseline pays O(n/w), proving the counter counts."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, jax.numpy as jnp
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.core.band_storage import unpack_band
+        from repro.core.sbr import reduce_to_band
+        from repro.dist import eigensolver as de
+        # data=2: the row collectives (all_gather/psum) are real, not no-ops
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        n, w = 32, 4
+        M = jax.random.normal(jax.random.PRNGKey(3), (n, n), jnp.float64)
+        C = 0.5 * (M + M.T)
+        de.reset_dispatch_count()
+        W, Q1 = de.dist_reduce_to_band(mesh, C, w)
+        jax.block_until_ready((W, Q1))
+        fused = de.dispatch_count()
+        assert fused <= 3, fused
+        Wl, Q1l = np.asarray(W), np.asarray(Q1)
+        Wsym = 0.5 * (Wl + Wl.T)
+        # invariants: orthogonal Q1, exact band mask, Q1^T C Q1 = W
+        np.testing.assert_allclose(Q1l.T @ Q1l, np.eye(n), atol=1e-12)
+        d = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :])
+        assert np.abs(np.where(d > w, Wl, 0.0)).max() == 0.0
+        np.testing.assert_allclose(Q1l.T @ np.asarray(C) @ Q1l, Wsym,
+                                   atol=1e-11)
+        # numerical parity with the local fused sweep (same reflectors,
+        # same SYR2K update form -> agreement far below the invariant tol)
+        band = reduce_to_band(C, w=w)
+        np.testing.assert_allclose(Wsym, np.asarray(unpack_band(band.Wb)),
+                                   atol=1e-11)
+        np.testing.assert_allclose(np.abs(Q1l), np.abs(np.asarray(band.Q1)),
+                                   atol=1e-10)
+        de.reset_dispatch_count()
+        Ws, Q1s = de.dist_reduce_to_band_stepwise(mesh, C, w)
+        jax.block_until_ready((Ws, Q1s))
+        n_panels = len(range(0, n - w - 1, w))
+        assert de.dispatch_count() >= 4 * n_panels, de.dispatch_count()
+        np.testing.assert_allclose(np.asarray(Ws), Wsym, atol=1e-11)
+        # odd n (not divisible by the 2 row shards): the identity-padding
+        # path must stay one fused dispatch and match the local reduction
+        n2 = 33
+        M2 = jax.random.normal(jax.random.PRNGKey(4), (n2, n2), jnp.float64)
+        C2 = 0.5 * (M2 + M2.T)
+        de.reset_dispatch_count()
+        W2, Q12 = de.dist_reduce_to_band(mesh, C2, w)
+        jax.block_until_ready((W2, Q12))
+        assert de.dispatch_count() <= 3, de.dispatch_count()
+        assert W2.shape == (n2, n2) and Q12.shape == (n2, n2)
+        W2l, Q12l = np.asarray(W2), np.asarray(Q12)
+        band2 = reduce_to_band(C2, w=w)
+        np.testing.assert_allclose(0.5 * (W2l + W2l.T),
+                                   np.asarray(unpack_band(band2.Wb)),
+                                   atol=1e-11)
+        np.testing.assert_allclose(Q12l.T @ Q12l, np.eye(n2), atol=1e-12)
+        print("DIST_TT1_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "DIST_TT1_OK" in out.stdout, out.stdout + out.stderr[-3000:]
+
+
 def test_distributed_tt_parity_two_device():
     """Fast lane: the distributed two-stage (TT) pipeline on a 2-device
     (1, 2) mesh matches the local TT eigenvalues to 1e-6. (n kept small:

@@ -37,6 +37,11 @@ GOLDEN = [
     ((9997, 100, (4, 2), True), "TT"),
     ((17243, 448, (4, 2), False), "TT"),
     ((512, 8, (4, 2), False), "KE"),
+    # the BENCH_variant_race config (n=128, s=4, 8 host devices): TT on
+    # both generators — with t_dispatch calibrated the gap only widens
+    # (KE pays ~3 dispatches x 300 restarts, the fused TT1 sweep pays 2)
+    ((128, 4, (4, 2), False), "TT"),
+    ((128, 4, (4, 2), True), "TT"),
 ]
 
 
@@ -138,6 +143,31 @@ def test_from_artifact_returns_calibrated_params():
     # multicore rates; calibration must actually move the params
     assert mach.peak_flops != base.peak_flops
     assert mach.dtype_bytes == base.dtype_bytes
+    # the host mesh pays O(ms) per shard_map dispatch, and the artifact's
+    # 300-restart KE run is dispatch-dominated: the fit must attribute a
+    # strictly positive (and plausibly-sized) per-dispatch latency
+    assert 1e-5 < mach.t_dispatch < 1.0, mach.t_dispatch
+
+
+def test_dispatch_term_separates_ke_from_tt():
+    """The structural claim behind t_dispatch: at the race config the
+    Krylov path issues ~2 orders of magnitude more dispatches than the
+    fused one-program TT pipeline, so a millisecond-scale t_dispatch moves
+    KE's predicted total by seconds while TT's barely moves."""
+    n, s, m = 128, 4, 48
+    n_iter = 6626   # the race artifact's measured matvec count (300 restarts)
+    ke = stage_costs("KE", n, s, m=m, n_iter=n_iter)
+    tt = stage_costs("TT", n, s, band_width=8)
+    d_ke = sum(c.dispatches for c in ke.values())
+    d_tt = sum(c.dispatches for c in tt.values())
+    assert d_tt <= 10, d_tt                      # fused pipelines: O(1) each
+    assert d_ke >= 10 * d_tt, (d_ke, d_tt)       # restart loop dominates
+    mach = MachineParams(t_dispatch=5e-3)
+    base = MachineParams()
+    for costs, d_total in ((ke, d_ke), (tt, d_tt)):
+        tot = sum(c.seconds(mach, 8) for c in costs.values())
+        tot0 = sum(c.seconds(base, 8) for c in costs.values())
+        np.testing.assert_allclose(tot - tot0, d_total * 5e-3, rtol=1e-9)
 
 
 def test_calibrated_ordering_matches_measured():
@@ -183,3 +213,28 @@ def test_calibrated_ordering_matches_measured():
             pred_order = sorted(pred, key=pred.get)
             assert pred_order == meas_order, (race["problem"], pred,
                                               measured)
+
+
+def test_calibrated_router_picks_converged_winner():
+    """End-to-end router regression against the regenerated artifact:
+    ``choose_variant`` under the artifact-calibrated machine must pick the
+    converged-aware ``measured_winner`` the race recorded (an unconverged
+    KE is annotated and ineligible no matter its wall clock — the
+    satellite fix this PR; the fused TT1 makes TT the winner outright)."""
+    path = _race_artifact_path()
+    with open(path) as f:
+        art = json.load(f)
+    mach = MachineParams.from_artifact(path)
+    assert art["races"], "artifact has no races"
+    for race in art["races"]:
+        assert "unconverged" in race, "race missing the converged annotation"
+        n_iter = next((r["n_matvec"] for r in race["measured"]
+                       if "n_matvec" in r), None)
+        w = next((r["band_width"] for r in race["measured"]
+                  if "band_width" in r), 8)
+        choice = choose_variant(art["n"], art["s"], band_width=w,
+                                n_iter=n_iter, machine=mach,
+                                mesh_shape=(art["n_devices"],),
+                                allow=("TT", "KE"))
+        assert choice.variant == race["measured_winner"], (
+            race["problem"], choice.table, race["measured_winner"])
