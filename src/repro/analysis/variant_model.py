@@ -6,22 +6,28 @@ estimated Lanczos iterations, mesh shape)`` and exposes
 (arXiv:1504.06443) argue for: hybrid selection between the direct
 (reduction) and iterative (Krylov) paths.
 
-Model: every stage is (flops, bytes, collective_bytes, dispatches); its
-time is the roofline ``max(flops / (P * peak_flops), bytes / (P * mem_bw))
-+ collective_bytes / link_bw + dispatches * t_dispatch`` with P = number
-of devices. The first three terms are exactly the split of
-``analysis.roofline``; the fourth charges each host->device program
-dispatch a fixed latency — the term that closed the 19us-predicted /
-14s-measured gap of the PR-4-era race artifact: a host-CPU mesh pays
-O(10ms) per shard_map dispatch, so a 300-restart Lanczos run (3 dispatches
-per restart) is dispatch-bound no matter what the flops say. The default
-``MachineParams`` are the paper's multicore regime (flop:byte ratio ~5,
-``t_dispatch = 0`` — a real accelerator queue hides launch latency at this
-granularity) and ``MachineParams.tpu_v5e()`` reuses the roofline
-constants. Measured calibration points can be folded in from a compiled
-executable via ``MachineParams.from_compiled`` (which reads
+Model: every stage is (flops, bytes, collective_bytes, dispatches,
+collectives); its time is the roofline ``max(flops / (P * peak_flops),
+bytes / (P * mem_bw)) + collective_bytes / link_bw + dispatches *
+t_dispatch + collectives * t_collective`` with P = number of devices. The
+first three terms are exactly the split of ``analysis.roofline``; the
+fourth charges each host->device program dispatch a fixed latency — the
+term that closed the 19us-predicted / 14s-measured gap of the PR-4-era
+race artifact: a host-CPU mesh pays O(10ms) per shard_map dispatch, so
+the old 3-dispatches-per-restart Lanczos driver was dispatch-bound no
+matter what the flops say. The fifth charges each cross-device collective
+a fixed latency on top of its bandwidth term — the term that
+distinguishes the communication-avoiding block Lanczos (2 collectives per
+p-column block step) from the single-vector driver it replaced (2 per
+matvec). The default ``MachineParams`` are the paper's multicore regime
+(flop:byte ratio ~5, ``t_dispatch = t_collective = 0`` — a real
+accelerator queue hides launch latency at this granularity) and
+``MachineParams.tpu_v5e()`` reuses the roofline constants. Measured
+calibration points can be folded in from a compiled executable via
+``MachineParams.from_compiled`` (which reads
 ``roofline.cost_analysis_dict``) or from a benchmark artifact via
-``MachineParams.from_artifact`` (which also fits ``t_dispatch``).
+``MachineParams.from_artifact`` (which also fits ``t_dispatch`` and
+``t_collective``).
 
 The qualitative predictions reproduce the paper's Tables: TD1 is
 memory-bound (BLAS-2), TT converts it to compute-bound BLAS-3 at the cost
@@ -53,6 +59,8 @@ class MachineParams:
     link_bw: float = 25e9          # B/s inter-device
     dtype_bytes: int = 8
     t_dispatch: float = 0.0        # s per host->device program dispatch
+    t_collective: float = 0.0      # s per cross-device collective launch
+    t_loop_step: float = 0.0       # s per sequential while/fori loop step
 
     @classmethod
     def tpu_v5e(cls) -> "MachineParams":
@@ -89,19 +97,28 @@ class MachineParams:
         ``path`` is a ``BENCH_variant_race.json``-schema artifact: top-level
         ``n``/``s``/``n_devices`` plus ``races[].measured[]`` records with
         per-stage wall-clock (``stage_times_s``). Every measured stage is
-        matched to its modeled ``(flops, bytes, dispatches)`` from
-        :func:`stage_costs` (for Krylov stages the *measured* ``n_matvec``
-        replaces the heuristic iteration estimate), then an alternating
-        fit recovers the effective ``peak_flops`` / ``mem_bw`` AND the
-        per-dispatch latency ``t_dispatch``: (1) given the current rates,
-        least-squares the roofline residual against each stage's dispatch
-        count; (2) classify each stage by its currently-dominant roofline
-        term and refit each rate as total-work / total-time of its class
-        after subtracting the dispatch share; iterate. Unlike a single
-        uniform rescale, this moves the flop:byte ratio and splits
-        dispatch latency out of throughput — the term that lets the
-        calibrated router predict a multi-second dispatch-bound Lanczos
-        run instead of the microseconds its flops imply.
+        matched to its modeled ``(flops, bytes, dispatches, collectives,
+        loop_steps)`` from :func:`stage_costs` (for Krylov stages the
+        *measured* ``n_matvec`` replaces the heuristic iteration
+        estimate), then the fit recovers the effective
+        ``peak_flops`` / ``mem_bw`` AND the three overhead terms:
+        (1) against the base roofline (whose terms are microseconds on a
+        host mesh, so residual ~= wall), take the median
+        residual-per-loop-step over the serial wavefront stages as
+        ``t_loop_step`` — the TT2 chase and TT4 replay are thousands of
+        sequential ``fori_loop`` steps, the off-roofline wall that would
+        otherwise masquerade as a collapsed "effective bandwidth" and
+        zero every other term in a least-squares fit — then the median
+        leftover-per-dispatch as ``t_dispatch`` and leftover-per-
+        collective as ``t_collective``, each clamped nonnegative;
+        (2) classify each stage by its currently-dominant roofline term
+        and refit each rate as total-work / total-time of its class
+        after subtracting the overhead share; iterate (the overheads are
+        fit once, not re-entered, precisely so refitted rates cannot
+        erode them). Unlike a single uniform rescale, this moves the
+        flop:byte ratio and splits serial overhead out of throughput —
+        the terms that let the calibrated router price the host-mesh
+        loop/dispatch/collective round trips the raw flops hide.
         """
         base = base or cls()
         with open(path) as f:
@@ -114,7 +131,9 @@ class MachineParams:
                 v = rec.get("variant")
                 if v not in VARIANTS:
                     continue
-                kw = {"band_width": int(rec.get("band_width", 8))}
+                kw = {"band_width": int(rec.get("band_width", 8)),
+                      "p": int(rec.get("krylov_block", 1)),
+                      "filter_degree": int(rec.get("filter_degree", 0))}
                 if "n_matvec" in rec:
                     kw["n_iter"] = int(rec["n_matvec"])
                 costs = stage_costs(v, n, s, machine=base, **kw)
@@ -122,44 +141,60 @@ class MachineParams:
                     c = costs.get(st)
                     if c is not None and t > 0.0:
                         samples.append((c.flops, c.bytes, c.collective_bytes,
-                                        c.dispatches, float(t)))
+                                        c.dispatches, c.collectives,
+                                        c.loop_steps, float(t)))
         if not samples:
             return base
         pf, pm = base.peak_flops, base.mem_bw
-        td = base.t_dispatch
+        td, tc = base.t_dispatch, base.t_collective
+        def _median(xs):
+            xs = sorted(xs)
+            return xs[len(xs) // 2] if xs else 0.0
+
+        # (1) overhead terms, once, against the BASE roofline (whose
+        # terms are microseconds here, so residual ~= wall): robust
+        # medians, clamped nonnegative. Fitting overheads before
+        # throughput — and not re-entering with the refitted rates —
+        # keeps outlier stages from zeroing a term out via an
+        # ever-shrinking "effective bandwidth". Order matters: the
+        # per-loop-step overhead comes from the serial wavefront stages
+        # (thousands of steps, residual ~= wall), then per-dispatch
+        # latency from the remaining residuals, then per-collective.
+        def _roof(F, B, Cb):
+            return (max(F / (p * base.peak_flops), B / (p * base.mem_bw))
+                    + (Cb / base.link_bw if p > 1 else 0.0))
+        per_step = [(t - _roof(F, B, Cb)) / L
+                    for F, B, Cb, D, K, L, t in samples if L > 0.0]
+        ts = max(_median(per_step), 0.0) if per_step else base.t_loop_step
+        per_disp = [(t - _roof(F, B, Cb) - L * ts) / D
+                    for F, B, Cb, D, K, L, t in samples if D > 0.0]
+        td = max(_median(per_disp), 0.0) if per_disp else td
+        per_coll = [(t - _roof(F, B, Cb) - L * ts - D * td) / K
+                    for F, B, Cb, D, K, L, t in samples if K > 0.0 and p > 1]
+        tc = max(_median(per_coll), 0.0) if per_coll else 0.0
+
         for _ in range(n_fit_iters):
-            # (1) dispatch latency: least squares of the roofline residual
-            # against the dispatch counts (clamped nonnegative)
-            num = den = 0.0
-            for F, B, Cb, D, t in samples:
-                if D <= 0.0:
-                    continue
-                t_roof = (max(F / (p * pf), B / (p * pm))
-                          + (Cb / base.link_bw if p > 1 else 0.0))
-                num += D * (t - t_roof)
-                den += D * D
-            new_td = max(num / den, 0.0) if den > 0.0 else td
-            # (2) throughputs on the post-dispatch residual
+            # (2) throughputs on the post-overhead residual
             work = {"f": 0.0, "b": 0.0}
             wall = {"f": 0.0, "b": 0.0}
-            for F, B, Cb, D, t in samples:
+            for F, B, Cb, D, K, L, t in samples:
+                t_lat = L * ts + D * td + (K * tc if p > 1 else 0.0)
                 t_eff = max(t - (Cb / base.link_bw if p > 1 else 0.0)
-                            - D * new_td, 0.05 * t)
+                            - t_lat, 0.05 * t)
                 cls_key = "f" if F / pf >= B / pm else "b"
                 work[cls_key] += (F if cls_key == "f" else B) / p
                 wall[cls_key] += t_eff
             new_pf = work["f"] / wall["f"] if wall["f"] > 0 else pf
             new_pm = work["b"] / wall["b"] if wall["b"] > 0 else pm
             if (abs(new_pf - pf) <= 1e-9 * pf
-                    and abs(new_pm - pm) <= 1e-9 * pm
-                    and abs(new_td - td) <= 1e-9 * max(td, 1e-30)):
-                td = new_td
+                    and abs(new_pm - pm) <= 1e-9 * pm):
                 break
-            pf, pm, td = new_pf, new_pm, new_td
+            pf, pm = new_pf, new_pm
         link_scale = math.sqrt((pf / base.peak_flops) * (pm / base.mem_bw))
         return dataclasses.replace(base, peak_flops=pf, mem_bw=pm,
                                    link_bw=base.link_bw * link_scale,
-                                   t_dispatch=td)
+                                   t_dispatch=td, t_collective=tc,
+                                   t_loop_step=ts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,35 +205,64 @@ class StageCost:
     #: host->device program dispatches the stage's implementation issues
     #: (NOT divided by device count: dispatch latency is serial on the host)
     dispatches: float = 0.0
+    #: cross-device collective launches (psum / all_gather) the stage's
+    #: distributed implementation issues; each pays a fixed latency on top
+    #: of the bandwidth term (only charged on a multi-device mesh)
+    collectives: float = 0.0
+    #: sequential ``fori_loop``/``while_loop`` trip count of the stage's
+    #: implementation (NOT divided by device count: a replicated wavefront
+    #: loop is serialized regardless of mesh size, each step paying the
+    #: runtime's per-iteration overhead)
+    loop_steps: float = 0.0
 
     def seconds(self, machine: MachineParams, n_devices: int) -> float:
         p = max(int(n_devices), 1)
         t_comp = self.flops / (p * machine.peak_flops)
         t_mem = self.bytes / (p * machine.mem_bw)
-        t_coll = (self.collective_bytes / machine.link_bw
+        t_coll = ((self.collective_bytes / machine.link_bw
+                   + self.collectives * machine.t_collective)
                   if p > 1 else 0.0)
         return (max(t_comp, t_mem) + t_coll
-                + self.dispatches * machine.t_dispatch)
+                + self.dispatches * machine.t_dispatch
+                + self.loop_steps * machine.t_loop_step)
 
 
 def estimate_lanczos_iters(n: int, s: int, m: Optional[int] = None,
-                           clustered: bool = False) -> int:
+                           clustered: bool = False, p: int = 1,
+                           filter_degree: int = 0) -> int:
     """Matvec-count heuristic for thick-restart Lanczos on the paper's
     workloads: well-separated MD spectra converge in a few sweeps of the
     restart subspace; clustered DFT valence bands take ~10x longer
-    (the paper's Experiment 2 hit ~4k iterations at s=448)."""
+    (the paper's Experiment 2 hit ~4k iterations at s=448).
+
+    A Chebyshev-filtered start block (``filter_degree > 0``) damps the
+    unwanted end of a clustered spectrum before the first sweep, cutting
+    the restart count to roughly a third; the probe + filter matvecs it
+    spends up front are added back in. ``p`` is the Lanczos block size —
+    it only enters through the p-scaled default subspace (each block step
+    still does p matvecs, so the matvec count itself is p-free)."""
     if m is None:
-        m = default_subspace(s, n)
+        m = default_subspace(s, n, p)
     per_restart = max(m - s, 1)
     n_restarts = 24 if clustered else 4
-    return int(min(n * 2, m + n_restarts * per_restart))
+    extra = 0
+    if filter_degree > 0:
+        if clustered:
+            n_restarts = max(n_restarts // 3, 4)
+        # bounds probe (a short single-vector Lanczos run) + the filter
+        # itself (degree matvecs on each of the p start columns)
+        extra = min(max(2 * s, 12), n - 1) + filter_degree * p
+    return int(min(n * 2, m + n_restarts * per_restart + extra))
 
 
-def estimate_lanczos_restarts(n_iter: int, s: int, m: int) -> int:
+def estimate_lanczos_restarts(n_iter: int, s: int, m: int,
+                              p: int = 1) -> int:
     """Thick-restart count implied by a matvec budget: the first sweep does
     m matvecs, every later restart extends by ``per_restart`` more (the
-    ``core.lanczos.restart_schedule`` the drivers themselves use)."""
-    _, per_restart = restart_schedule(s, m)
+    ``core.lanczos.restart_schedule`` the drivers themselves use — for a
+    block driver the schedule is p-aligned, so ``per_restart`` is already
+    a whole number of p-column block steps)."""
+    _, per_restart = restart_schedule(s, m, p)
     return max(1, -(-(max(n_iter - m, 0)) // per_restart) + 1)
 
 
@@ -211,12 +275,38 @@ def _mesh_devices(mesh_shape: Optional[Sequence[int]]) -> int:
     return p
 
 
+def _chase_loop_steps(n: int, w: int) -> float:
+    """Sequential wavefront steps of the TT2 bulge chase (core.sbr).
+
+    One pass per bandwidth ``b = w..2``; a pass's ``fori_loop`` runs
+    ``T_pass = g (J - 1) + 1`` steps with ``J = n - b`` columns and sweep
+    stagger ``g = 2 + ceil(5 / b)`` — mirrors ``sbr._pass_schedule``.
+    """
+    total = 0
+    for bb in range(int(w), 1, -1):
+        J = n - bb
+        if J <= 0:
+            continue
+        g = 2 + -(-5 // bb)
+        total += g * (J - 1) + 1
+    return float(total)
+
+
+def _replay_loop_steps(n: int, w: int) -> float:
+    """Sequential sweep-replay steps of the TT4 back-transform: each pass
+    replays its ``J = n - b`` recorded column sweeps one fused rotation
+    batch at a time (``sbr._replay_pass``)."""
+    return float(sum(n - bb for bb in range(int(w), 1, -1) if n - bb > 0))
+
+
 def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
                 m: Optional[int] = None, n_iter: Optional[int] = None,
                 clustered: bool = False,
                 machine: Optional[MachineParams] = None,
+                p: int = 1, filter_degree: int = 0,
                 ) -> Dict[str, StageCost]:
-    """Per-stage (flops, bytes, collective_bytes, dispatches) per variant.
+    """Per-stage (flops, bytes, collective_bytes, dispatches, collectives)
+    per variant.
 
     Flop counts are the standard LAPACK/SBR operation counts; byte counts
     encode each stage's BLAS level (BLAS-2 stages stream the trailing
@@ -225,19 +315,28 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
     constant number of passes). Dispatch counts model the CURRENT
     implementations: every direct stage is a single (or a couple of)
     jitted program(s) — in particular TT1 is the fused one-program panel
-    sweep, NOT the old O(n/w)-dispatch host loop — while the Krylov
-    drivers issue 3 dispatches per thick restart (segment, restart math,
-    convergence fetch: see ``core.lanczos``).
+    sweep, NOT the old O(n/w)-dispatch host loop — and the distributed
+    Krylov driver runs each thick restart (segment + restart math +
+    convergence flag) as ONE fused shard_map program, so it pays
+    ``restarts + 2`` dispatches total (the +2: bounds-probe/filter prep
+    and the final Ritz extraction), not the old 3-per-restart host loop.
+    Collective counts charge the communication-avoiding block matvec its
+    exact budget: 2 collectives (one psum + one all_gather) per p-column
+    block step, so raising ``p`` divides the collective-latency term by p
+    while leaving the matvec flops unchanged — the knob that makes
+    distributed KE competitive again.
     """
     assert variant in VARIANTS, variant
     machine = machine or MachineParams()
     b = machine.dtype_bytes
     n3, n2 = float(n) ** 3, float(n) ** 2
     w = band_width
+    p_blk = max(int(p), 1)
     if m is None:
-        m = default_subspace(s, n)
+        m = default_subspace(s, n, p_blk)
     if n_iter is None:
-        n_iter = estimate_lanczos_iters(n, s, m, clustered=clustered)
+        n_iter = estimate_lanczos_iters(n, s, m, clustered=clustered,
+                                        p=p_blk, filter_degree=filter_degree)
     coll_panel = n2 * b  # O(n w) panel broadcast x (n / w) panels
 
     costs: Dict[str, StageCost] = {}
@@ -261,7 +360,8 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
         # dispatches, NOT n/w (see core.sbr.reduce_to_band /
         # dist.sharded_la.band_sweep_program).
         costs["TT1"] = StageCost(4 * n3 / 3.0 + 2 * n3,
-                                 (n3 / max(w, 1)) * b, coll_panel, 2)
+                                 (n3 / max(w, 1)) * b, coll_panel, 2,
+                                 2.0 * n / max(w, 1))
         # TT2: wavefront bulge chasing over packed (w+1, n) band storage —
         # O(n^2 w) flops touching only the O(n w) band. The rotation stream
         # is recorded, NOT accumulated into an (n, n) Q2 (that would cost
@@ -269,26 +369,43 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
         # old 19us-predicted / 16s-measured gap); the stream replays onto
         # the thin slab in TT4.
         h_w = sum(1.0 / bb for bb in range(2, max(w, 2) + 1))
-        costs["TT2"] = StageCost(6 * n2 * w, 6 * n2 * w * b / 8, 0.0, 1)
+        # The chase is ONE dispatched program, but inside it the wavefront
+        # schedule is a genuinely sequential fori_loop — ~g n steps per
+        # bandwidth pass — and each step pays the runtime's per-iteration
+        # overhead. On a host mesh that serial term (~100us x thousands of
+        # steps), not the O(n w) byte traffic, is what the measured TT2
+        # wall is made of; modeling it as bytes is the fit-distorting
+        # outlier behind the old calibration failures.
+        costs["TT2"] = StageCost(6 * n2 * w, 6 * n2 * w * b / 8, 0.0, 1,
+                                 0.0, _chase_loop_steps(n, w))
         costs["TT3"] = StageCost(60.0 * n * s, 10.0 * n * s * b, 0.0, 1)
         # TT4: replay the ~n^2/2 sum 1/b recorded rotations over the (n, s)
-        # Ritz slab (6s flops each), then one GEMM against the explicit Q1
+        # Ritz slab (6s flops each), then one GEMM against the explicit Q1.
+        # The replay shares TT2's serial character: one fused rotation
+        # batch per recorded column sweep, ~(w-1) n sequential steps.
         costs["TT4"] = StageCost(
             2 * n2 * s + 2 * n * s * s + 3 * n2 * s * h_w,
-            3 * n2 * b + (n2 / 2) * h_w * b, n * s * b, 2)
+            3 * n2 * b + (n2 / 2) * h_w * b, n * s * b, 2,
+            0.0, _replay_loop_steps(n, w))
     else:
         # Krylov iteration: each matvec streams the n^2 operand (memory
         # bound); re-orthogonalization adds 8 n m flops per step. KI's
-        # implicit operator is two triangular solves + one SYMV. The host
-        # issues 3 dispatches per thick restart (one fused m-step segment,
-        # one restart-math program, one scalar convergence fetch) — at
-        # O(ms) per dispatch on a host mesh this term, not the flops, is
-        # what makes a 300-restart run take ~10s.
+        # implicit operator is two triangular solves + one SYMV. The
+        # distributed driver fuses each thick restart (m-step block
+        # segment + restart math + convergence flag) into ONE shard_map
+        # program — ``restarts + 2`` dispatches total, the +2 being the
+        # filter/seed prep and final Ritz-vector extraction — and the
+        # communication-avoiding block matvec pays exactly 2 collectives
+        # (psum + all_gather) per p-column block step. At O(ms) per
+        # dispatch/collective on a host mesh these latency terms, not the
+        # flops, decide the race; p divides the collective term.
         mv_flops = (2 * n2 if variant == "KE" else 4 * n2) + 8.0 * n * m
         mv_bytes = (n2 if variant == "KE" else 2 * n2) * b + 2.0 * n * m * b
+        n_restart = estimate_lanczos_restarts(n_iter, s, m, p_blk)
+        n_block_steps = -(-int(n_iter) // p_blk)
         costs[f"{variant}_iter"] = StageCost(
             n_iter * mv_flops, n_iter * mv_bytes, n_iter * n * b,
-            3 * estimate_lanczos_restarts(n_iter, s, m))
+            n_restart + 2, 2.0 * n_block_steps)
 
     # BT1: X = U^{-1} Y, one TRSM on an (n, s) slab
     costs["BT1"] = StageCost(n2 * s, 2 * n2 * b, n * s * b, 1)
@@ -327,12 +444,18 @@ def choose_variant(n: int, s: int, band_width: int = 8,
                    clustered: bool = False,
                    machine: Optional[MachineParams] = None,
                    mesh_shape: Optional[Sequence[int]] = None,
-                   allow: Optional[Sequence[str]] = None) -> VariantChoice:
+                   allow: Optional[Sequence[str]] = None,
+                   krylov_block: int = 1,
+                   filter_degree: int = 0) -> VariantChoice:
     """Pick the fastest variant under the cost model.
 
     With a multi-device ``mesh_shape`` the candidate set narrows to the
     variants that actually have a distributed implementation (TT, KE);
     ties break toward the earlier entry of ``VARIANTS`` for determinism.
+    ``krylov_block`` / ``filter_degree`` describe the Krylov pipelines the
+    KE/KI candidates would actually run (block size p divides the
+    collective-latency term; a Chebyshev filter cuts the clustered-spectrum
+    iteration estimate) — they do not affect the direct variants.
     """
     p = _mesh_devices(mesh_shape)
     if allow is None:
@@ -341,10 +464,12 @@ def choose_variant(n: int, s: int, band_width: int = 8,
     for v in VARIANTS:
         if v not in allow:
             continue
+        kkw = ({"p": krylov_block, "filter_degree": filter_degree}
+               if v in ("KE", "KI") else {})
         table[v] = predict_stage_times(
             v, n, s, machine=machine, mesh_shape=mesh_shape,
             band_width=band_width, m=m, n_iter=n_iter,
-            clustered=clustered)["Tot."]
+            clustered=clustered, **kkw)["Tot."]
     best = min(table, key=lambda v: (table[v], VARIANTS.index(v)))
     return VariantChoice(variant=best, predicted_s=table[best], table=table,
                          n_devices=p)

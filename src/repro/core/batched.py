@@ -90,7 +90,8 @@ def _pipeline_direct(A, B, key, *, s: int, variant: str, which: str,
 
 
 def _pipeline_krylov(A, B, key, *, s: int, variant: str, which: str,
-                     m: int, max_restarts: int, invert: bool):
+                     m: int, max_restarts: int, invert: bool, p: int,
+                     filter_degree: int):
     B_orig = B
     if invert:
         A, B = B, A
@@ -98,9 +99,10 @@ def _pipeline_krylov(A, B, key, *, s: int, variant: str, which: str,
     U, C = _standard_form(A, B)
     op = ExplicitC(C) if variant == "KE" else ImplicitC(A, U)
     arp_which = "SA" if which == "smallest" else "LA"
-    v0 = jax.random.normal(key, (A.shape[0],), A.dtype)
+    v0 = jax.random.normal(key, (A.shape[0], p), A.dtype)
     lam, Y, _, converged = lanczos_solve_jit(op, v0, s, m, which=arp_which,
-                                             max_restarts=max_restarts)
+                                             max_restarts=max_restarts, p=p,
+                                             filter_degree=filter_degree)
     order = jnp.argsort(lam)
     lam, Y = lam[order], Y[:, order]
     X = back_transform_generalized(U, Y)
@@ -113,7 +115,8 @@ def _pipeline_krylov(A, B, key, *, s: int, variant: str, which: str,
 # shape-bucketed pipeline cache
 # --------------------------------------------------------------------------
 
-# (n, s, variant, which, band_width, m, max_restarts, invert, dtype) -> jitted
+# (n, s, variant, which, band_width, m, max_restarts, invert, p,
+#  filter_degree, dtype) -> jitted
 _PIPELINE_CACHE: Dict[Tuple, Any] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
 
@@ -121,23 +124,29 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 def pipeline_cache_key(n: int, s: int, variant: str, which: str, *,
                        band_width: int = 8, m: int | None = None,
                        max_restarts: int = 200, invert: bool = False,
+                       p: int = 1, filter_degree: int = 0,
                        dtype=jnp.float64) -> Tuple:
     if variant in ("KE", "KI") and m is None:
-        m = default_subspace(s, n)
+        m = default_subspace(s, n, p)
     return (int(n), int(s), variant, which, int(band_width),
             None if m is None else int(m), int(max_restarts), bool(invert),
-            jnp.dtype(dtype).name)
+            int(p), int(filter_degree), jnp.dtype(dtype).name)
 
 
 def get_pipeline(n: int, s: int, variant: str, which: str, *,
                  band_width: int = 8, m: int | None = None,
                  max_restarts: int = 200, invert: bool = False,
+                 p: int = 1, filter_degree: int = 0,
                  dtype=jnp.float64):
-    """The jitted vmapped pipeline for one shape bucket (cached)."""
+    """The jitted vmapped pipeline for one shape bucket (cached).
+
+    ``p`` (Lanczos block size) and ``filter_degree`` (Chebyshev start-block
+    filter) parameterize the Krylov pipelines — both are compile-time shape
+    choices, hence part of the bucket key."""
     assert variant in BATCHED_VARIANTS, variant
     ckey = pipeline_cache_key(n, s, variant, which, band_width=band_width,
                               m=m, max_restarts=max_restarts, invert=invert,
-                              dtype=dtype)
+                              p=p, filter_degree=filter_degree, dtype=dtype)
     fn = _PIPELINE_CACHE.get(ckey)
     if fn is not None:
         _CACHE_STATS["hits"] += 1
@@ -147,9 +156,10 @@ def get_pipeline(n: int, s: int, variant: str, which: str, *,
         one = partial(_pipeline_direct, s=s, variant=variant, which=which,
                       band_width=band_width, invert=invert)
     else:
-        m_eff = m if m is not None else default_subspace(s, n)
+        m_eff = m if m is not None else default_subspace(s, n, p)
         one = partial(_pipeline_krylov, s=s, variant=variant, which=which,
-                      m=m_eff, max_restarts=max_restarts, invert=invert)
+                      m=m_eff, max_restarts=max_restarts, invert=invert,
+                      p=p, filter_degree=filter_degree)
     fn = jax.jit(jax.vmap(one))
     _PIPELINE_CACHE[ckey] = fn
     return fn, ckey
@@ -179,12 +189,16 @@ def solve_batched(
     m: int | None = None,
     max_restarts: int = 200,
     key: jax.Array | None = None,
+    p: int = 1,
+    filter_degree: int = 0,
 ) -> BatchedSolveResult:
     """Solve a stack of same-shape pencils ``A[i] X = B[i] X Lambda``.
 
     ``A``, ``B``: (batch, n, n). Returns per-pencil ascending eigenvalues
     (batch, s) and B-orthonormal eigenvectors (batch, n, s). ``invert``
     applies the paper's MD inverse-pair trick per pencil (requires A SPD).
+    ``p`` / ``filter_degree`` select the block size and Chebyshev filter of
+    the Krylov pipelines (ignored by TD/TT).
 
     The underlying program is fetched from the shape-bucket cache — repeated
     calls with the same ``(n, s, variant, which, ...)`` reuse one compiled
@@ -198,7 +212,7 @@ def solve_batched(
     keys = jax.random.split(key, batch)
     fn, ckey = get_pipeline(n, s, variant, which, band_width=band_width,
                             m=m, max_restarts=max_restarts, invert=invert,
-                            dtype=A.dtype)
+                            p=p, filter_degree=filter_degree, dtype=A.dtype)
     t0 = time.perf_counter()
     lam, X, converged = fn(A, B, keys)
     jax.block_until_ready(lam)

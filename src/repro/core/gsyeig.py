@@ -90,6 +90,8 @@ def solve(
     mesh=None,
     clustered: bool = False,
     machine=None,
+    krylov_block: int | None = None,
+    filter: int | None = None,        # noqa: A002 — the paper-facing name
 ) -> GSyEigResult:
     """`mesh=` (a jax.sharding.Mesh with a 'model' axis plus data axes)
     dispatches the KE and TT variants onto the distributed pipelines in
@@ -102,14 +104,28 @@ def solve(
     ``(n, s, band_width, mesh)``; the choice and its predicted-time table
     land in ``result.info['router']``. ``clustered=True`` tells the router
     the wanted end of the spectrum is clustered (DFT-like valence bands),
-    which inflates the Lanczos iteration estimate ~10x — the decisive
-    input for the KE-vs-TT crossover. ``machine=`` optionally supplies a
-    (possibly measurement-calibrated, see ``MachineParams.from_artifact``)
-    throughput model for the router."""
+    which inflates the Lanczos iteration estimate — the decisive input for
+    the KE-vs-TT crossover. ``machine=`` optionally supplies a (possibly
+    measurement-calibrated, see ``MachineParams.from_artifact``)
+    throughput model for the router.
+
+    Krylov-side knobs (KE/KI only): ``krylov_block`` is the Lanczos block
+    size p — each s-step segment advances p basis vectors with one fused
+    multi-RHS matvec (``None`` = auto: 4 on a mesh, where the block
+    structure is what buys the two-collectives-per-step schedule, 1
+    locally). ``filter`` is the Chebyshev start-block filter degree
+    (``None`` = auto: 16 when ``clustered=True`` — the clustered wanted
+    end is exactly the case the filter exists for — else off; 0 forces
+    off). Both land in ``result.info['krylov']``."""
     n = A.shape[0]
     times: Dict[str, float] = {}
     info: Dict[str, Any] = {"variant": variant, "n": n, "s": s,
                             "invert": invert, "which": which}
+    # Krylov knobs resolve once, for the router and both solve paths
+    p = krylov_block if krylov_block is not None else (
+        4 if mesh is not None else 1)
+    filter_degree = filter if filter is not None else (
+        16 if clustered else 0)
     if variant == "auto":
         from repro.analysis.variant_model import (DISTRIBUTED_VARIANTS,
                                                   choose_variant)
@@ -119,13 +135,16 @@ def solve(
         allow = DISTRIBUTED_VARIANTS if mesh is not None else None
         choice = choose_variant(n, s, band_width=band_width, m=m,
                                 clustered=clustered, mesh_shape=mesh_shape,
-                                allow=allow, machine=machine)
+                                allow=allow, machine=machine,
+                                krylov_block=p, filter_degree=filter_degree)
         variant = choice.variant
         info["variant"] = variant
         info["router"] = choice.as_json_dict()
     assert variant in VARIANTS, variant
     if key is None:
         key = jax.random.PRNGKey(20120520)
+    if variant in ("KE", "KI"):
+        info["krylov"] = {"p": int(p), "filter_degree": int(filter_degree)}
 
     B_orig = B
     if invert:
@@ -148,7 +167,8 @@ def solve(
             from repro.dist.eigensolver import solve_ke_distributed
             lam, X, dinfo = solve_ke_distributed(
                 mesh, A, B, s, m=m, which=which, tol=tol,
-                max_restarts=max_restarts, key=key, return_info=True)
+                max_restarts=max_restarts, key=key, return_info=True,
+                p=p, filter_degree=filter_degree)
         else:
             from repro.dist.eigensolver import solve_tt_distributed
             lam, X, dinfo = solve_tt_distributed(
@@ -213,11 +233,14 @@ def solve(
             op = ImplicitC(A, U)
             prefix = "KI"
         if m is None:
-            m = default_subspace(s, n)
+            m = default_subspace(s, n, p)
+        elif p > 1 and m % p:
+            m = -(-m // p) * p          # block-align a user-supplied m
         t0 = time.perf_counter()
         lres = lanczos_solve(op, s, which=arp_which, m=m, tol=tol,
                              max_restarts=max_restarts, key=key,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, p=p,
+                             filter_degree=filter_degree)
         jax.block_until_ready(lres.evecs)
         times[f"{prefix}_iter"] = time.perf_counter() - t0
         # plain-Python payloads only: info must survive json.dump in the

@@ -1,23 +1,38 @@
-"""KE/KI — implicitly-restarted Lanczos (ARPACK DSAUPD/DSEUPD analogue).
+"""KE/KI — implicitly-restarted BLOCK Lanczos (ARPACK DSAUPD/DSEUPD analogue).
 
-We implement the symmetric thick-restart formulation (Wu & Simon, TRLan),
-which is mathematically equivalent to ARPACK's implicit QR restart for
-symmetric operators but maps onto fixed-shape JAX buffers: a single
-(n, m+1) basis buffer, a dense (m+1, m+1) projected matrix, and restart =
-eigh of an m x m block. Full (two-pass) re-orthogonalization is used, the
-O(nm)-per-iteration worst case the paper quotes.
+We implement the symmetric thick-restart formulation (Wu & Simon, TRLan)
+generalized to a *block / s-step* method: the factorization advances by a
+whole (n, p) block per step — ONE fused multi-RHS matvec (a GEMM /
+``kernels/symv.symm_block`` instead of p SYMVs), two-pass block
+re-orthogonalization, and a QR of the residual block. For ``p == 1`` this
+reduces exactly to the classical single-vector method (same shapes, same
+restart schedule). The block structure is what makes the distributed KE
+pipeline communication-avoiding: per block step the mesh pays ONE psum
+(the matvec coupling) plus ONE all_gather (which doubles as the broadcast
+because every shard runs the O(n m p) orthogonalization math redundantly —
+the same trick ``sharded_la.band_sweep_program`` uses for panel QR),
+instead of one collective round trip per matvec (see
+``repro.dist.eigensolver.ke_restart_program``).
+
+State maps onto fixed-shape JAX buffers: a single (n, m+p) basis buffer, a
+dense (m+p, m+p) projected matrix, and restart = eigh of an m x m block.
+Full (two-pass) re-orthogonalization is used, the O(nm)-per-iteration
+worst case the paper quotes.
 
 Two drivers:
   * ``lanczos_solve``      — host-driven restart loop (data-dependent
     iteration counts, per-stage timing for the benchmark tables). The
-    m-step extension runs as ONE jitted ``lax.fori_loop`` segment and the
-    convergence test is a single-scalar ``jax.device_get``, so each restart
-    costs O(1) device dispatches (the per-matvec host loop used to cost m,
-    and the old ``bool(jnp.all(conv))`` synced a whole array). The module
-    counts host->device dispatches (``dispatch_count``) so the regression
-    test can pin this down.
-  * ``lanczos_solve_jit``  — single jitted lax.while_loop (fixed max_restarts)
-    used by the distributed/dry-run path.
+    whole-segment extension runs as ONE jitted program and the
+    convergence test is a single-scalar ``jax.device_get``, so each
+    restart costs O(1) device dispatches. The module counts host->device
+    dispatches (``dispatch_count``) so the regression test can pin this.
+  * ``lanczos_solve_jit``  — single jitted lax.while_loop (fixed
+    max_restarts) used by the batched/dry-run path.
+
+Both drivers support Chebyshev polynomial filtering of the starting block
+(``filter_degree > 0``): spectral bounds come from a cheap k-step probe
+(``core.filtering``) and the filter damps the unwanted end so clustered
+DFT-like spectra converge inside the restart budget.
 """
 from __future__ import annotations
 
@@ -37,111 +52,134 @@ class LanczosResult(NamedTuple):
     n_matvec: int           # operator applications
     n_restart: int
     converged: bool
-    resid_bounds: jax.Array  # (s,) |beta_m * S[m-1, i]| at exit
+    resid_bounds: jax.Array  # (s,) ||B_q S[m-p:m, i]|| at exit
 
 
 # ---------------------------------------------------------------------------
-# single Lanczos step + the jitted m-step segment
+# one block step + the jitted whole-segment program
 # ---------------------------------------------------------------------------
 
-def _step_impl(matvec, V: jax.Array, T: jax.Array, j: jax.Array):
-    """Extend the factorization by one column: V (n, m+1), T ((m+1, m+1)).
-
-    ``matvec`` is any traceable y = C w closure — ``apply_op`` on the local
-    Operator pytrees, or a ``dist_symv`` over a device mesh (see
-    ``repro.dist.eigensolver``)."""
-    n, mp1 = V.shape
-    v_j = V[:, j]
-    w = matvec(v_j)
-    cols = jnp.arange(mp1)
-    mask = (cols <= j).astype(V.dtype)
-    # two-pass full re-orthogonalization (Kahan twice-is-enough)
-    h1 = (V.T @ w) * mask
-    w = w - V @ h1
-    h2 = (V.T @ w) * mask
-    w = w - V @ h2
-    h = h1 + h2
-    beta = jnp.linalg.norm(w)
-    T = T.at[:, j].set(h)
-    T = T.at[j, :].set(h)   # keep T numerically symmetric
-    T = T.at[j + 1, j].set(beta)
-    T = T.at[j, j + 1].set(beta)
-    v_next = w / jnp.maximum(beta, jnp.finfo(V.dtype).tiny)
-    V = V.at[:, j + 1].set(v_next)
-    return V, T, beta
+def _qr_posdiag(W: jax.Array):
+    """Reduced QR with the R diagonal forced nonnegative (deterministic;
+    for p == 1 this is exactly the classical v = w/||w||, beta = ||w||)."""
+    Q, R = jnp.linalg.qr(W)
+    sgn = jnp.sign(jnp.diagonal(R))
+    sgn = jnp.where(sgn == 0, jnp.ones_like(sgn), sgn)
+    return Q * sgn[None, :], R * sgn[:, None]
 
 
-def _segment_impl(matvec, V: jax.Array, T: jax.Array, j0):
-    """Steps j0..m-1 as ONE lax.fori_loop — one dispatch per restart.
+def _block_step_impl(matvec, V: jax.Array, T: jax.Array, j: jax.Array,
+                     p: int):
+    """Extend the factorization by one (n, p) block: columns
+    [j*p, (j+1)*p) of V (n, m+p), T ((m+p, m+p)).
 
-    ``j0`` is traced (0 on the first sweep, ``keep`` after a thick
-    restart), so a single compilation serves the whole solve."""
-    m = V.shape[1] - 1
+    ``matvec`` is any traceable Y = C X closure taking an (n, p) block —
+    ``apply_op`` on the local Operator pytrees (multi-RHS), or the fused
+    psum+all_gather matvec inside a ``shard_map`` region (see
+    ``repro.dist.eigensolver``). One call = p operator applications."""
+    n, mpp = V.shape
+    c0 = j * p
+    Vj = jax.lax.dynamic_slice(V, (jnp.zeros((), c0.dtype), c0), (n, p))
+    W = matvec(Vj)
+    cols = jnp.arange(mpp)
+    mask = (cols < c0 + p).astype(V.dtype)[:, None]
+    # two-pass full block re-orthogonalization (Kahan twice-is-enough)
+    H1 = (V.T @ W) * mask
+    W = W - V @ H1
+    H2 = (V.T @ W) * mask
+    W = W - V @ H2
+    H = H1 + H2                              # (m+p, p) projection coeffs
+    Q, B = _qr_posdiag(W)                    # residual block QR
+    # block column of T: H on rows < (j+1)p, the new coupling B below
+    Hb = H + jax.lax.dynamic_update_slice(
+        jnp.zeros_like(H), B, (c0 + p, jnp.zeros((), c0.dtype)))
+    T = jax.lax.dynamic_update_slice(T, Hb, (jnp.zeros((), c0.dtype), c0))
+    T = jax.lax.dynamic_update_slice(T, Hb.T, (c0, jnp.zeros((), c0.dtype)))
+    V = jax.lax.dynamic_update_slice(V, Q, (jnp.zeros((), c0.dtype), c0 + p))
+    return V, T, B
+
+
+def _segment_impl(matvec, V: jax.Array, T: jax.Array, j0, p: int = 1):
+    """Block steps j0..q-1 as ONE lax.fori_loop — one dispatch per restart.
+
+    ``j0`` is a traced BLOCK index (0 on the first sweep, ``keep // p``
+    after a thick restart), so a single compilation serves the whole
+    solve. Returns ``(V, T, B_q)`` with B_q the last (p, p) coupling."""
+    n, mpp = V.shape
+    q = (mpp - p) // p
 
     def body(j, carry):
         def run(args):
             V, T, _ = args
-            return _step_impl(matvec, V, T, j)
+            return _block_step_impl(matvec, V, T, j, p)
 
         return jax.lax.cond(j >= j0, run, lambda a: a, carry)
 
-    return jax.lax.fori_loop(0, m, body,
-                             (V, T, jnp.zeros((), V.dtype)))
+    return jax.lax.fori_loop(0, q, body,
+                             (V, T, jnp.zeros((p, p), V.dtype)))
 
 
-@partial(jax.jit, static_argnames=("use_kernel",), donate_argnums=(1, 2))
+@partial(jax.jit, static_argnames=("use_kernel", "p"), donate_argnums=(1, 2))
 def _lanczos_segment(op: Operator, V: jax.Array, T: jax.Array, j0,
-                     use_kernel: bool = False):
+                     use_kernel: bool = False, p: int = 1):
     """Operator-pytree segment: op rides along as a traced argument so one
     compilation serves every problem of the same shape."""
-    return _segment_impl(lambda v: apply_op(op, v, use_kernel=use_kernel),
-                         V, T, j0)
+    return _segment_impl(lambda X: apply_op(op, X, use_kernel=use_kernel),
+                         V, T, j0, p)
 
 
-def _make_segment(op, use_kernel: bool):
+def _make_segment(op, use_kernel: bool, p: int):
     """Segment driver for either op flavor.
 
     Operator pytrees reuse the module-level jitted segment (compile cache
-    shared across solves); bare matvec callables — the distributed path —
-    get a per-solve jit of the closure (the closure is stable across the
+    shared across solves); bare matvec callables — e.g. a distributed
+    closure — get a per-solve jit (the closure is stable across the
     restart loop, so each solve compiles the segment once)."""
     if isinstance(op, (ExplicitC, ImplicitC)):
         return lambda V, T, j0: _lanczos_segment(op, V, T, j0,
-                                                 use_kernel=use_kernel)
+                                                 use_kernel=use_kernel, p=p)
     if callable(op):
-        jit_seg = jax.jit(partial(_segment_impl, op), donate_argnums=(0, 1))
+        jit_seg = jax.jit(partial(_segment_impl, op, p=p),
+                          donate_argnums=(0, 1))
         return lambda V, T, j0: jit_seg(V, T, j0)
     raise TypeError(f"op must be an Operator or a matvec callable: {op!r}")
 
 
-@partial(jax.jit, static_argnames=("s", "keep", "m", "which"))
-def _restart_math(V: jax.Array, T: jax.Array, beta_m: jax.Array,
-                  tol_eff: jax.Array, s: int, keep: int, m: int, which: str):
+@partial(jax.jit, static_argnames=("s", "keep", "m", "p", "which"))
+def _restart_math(V: jax.Array, T: jax.Array, B_q: jax.Array,
+                  tol_eff: jax.Array, s: int, keep: int, m: int, p: int,
+                  which: str):
     """eigh of T_m, Ritz selection, residual bounds, thick-restart state AND
     the convergence verdict — everything per-restart in one jitted program,
-    so the host only fetches one scalar (``all_conv``) to decide."""
+    so the host only fetches one scalar (``all_conv``) to decide.
+
+    Residual bound of Ritz pair i is ``||B_q S[m-p:m, i]||`` (the block
+    generalization of |beta_m S[m-1, i]|); the thick restart keeps the
+    leading ``keep`` Ritz vectors (keep is a multiple of p) plus the
+    (n, p) residual block, with the (p, keep) coupling
+    ``B_q S[m-p:m, :keep]`` in the arrowhead of the new T."""
     Tm = 0.5 * (T[:m, :m] + T[:m, :m].T)
     theta, S = jnp.linalg.eigh(Tm)  # ascending
     if which == "LA":  # want the largest: reorder descending so wanted = first
         theta = theta[::-1]
         S = S[:, ::-1]
-    resid = jnp.abs(beta_m * S[m - 1, :])  # Ritz residual bounds, all m
+    b = B_q @ S[m - p:m, :]                 # (p, m) residual couplings
+    resid = jnp.linalg.norm(b, axis=0)      # Ritz residual bounds, all m
     # ARPACK dsconv criterion: bound_i <= tol * max(eps^{2/3}, |theta_i|)
     eps = jnp.finfo(V.dtype).eps
     eps23 = eps ** (2.0 / 3.0)
     conv = resid[:s] <= tol_eff * jnp.maximum(jnp.abs(theta[:s]), eps23)
     all_conv = jnp.all(conv)
-    # thick restart: keep leading `keep` Ritz pairs
+    # thick restart: keep leading `keep` Ritz pairs + the residual block
     V_new_cols = V[:, :m] @ S[:, :keep]                     # (n, keep)
-    v_res = V[:, m]                                          # residual vector
+    V_res = V[:, m:m + p]                                   # residual block
     V_restart = jnp.zeros_like(V)
     V_restart = V_restart.at[:, :keep].set(V_new_cols)
-    V_restart = V_restart.at[:, keep].set(v_res)
+    V_restart = V_restart.at[:, keep:keep + p].set(V_res)
     T_new = jnp.zeros_like(T)
     T_new = T_new.at[jnp.arange(keep), jnp.arange(keep)].set(theta[:keep])
-    b = beta_m * S[m - 1, :keep]
-    T_new = T_new.at[keep, :keep].set(b)
-    T_new = T_new.at[:keep, keep].set(b)
+    T_new = T_new.at[keep:keep + p, :keep].set(b[:, :keep])
+    T_new = T_new.at[:keep, keep:keep + p].set(b[:, :keep].T)
     return theta, S, resid, V_restart, T_new, all_conv
 
 
@@ -154,72 +192,125 @@ dispatch_count = _dispatch.count
 reset_dispatch_count = _dispatch.reset
 
 
-def default_subspace(s: int, n: int) -> int:
-    """ARPACK-style default NCV: m in [2s, n), at least 20."""
-    return int(min(max(2 * s + 1, 20), n - 1))
+def default_subspace(s: int, n: int, p: int = 1) -> int:
+    """ARPACK-style default NCV: m in [2s, n), at least 20 — rounded up to
+    a multiple of the block size p (and down so the (n, m+p) basis fits).
+
+    For blocks the subspace additionally scales with p: the Krylov
+    polynomial degree reachable per sweep is m/p, so keeping m fixed while
+    raising p would trade convergence for communication 1:1. m ~ 10p keeps
+    ~10 block steps per sweep (the single-vector default's depth at p=1)."""
+    m = int(min(max(2 * s + 1, 20), n - 1))
+    if p > 1:
+        m = max(m, min(10 * p, n // 2))
+        m = -(-m // p) * p                  # round up to a block multiple
+        m = min(m, ((n - p) // p) * p)      # basis must fit: m + p <= n
+    return m
 
 
-def restart_schedule(s: int, m: int) -> tuple:
+def restart_schedule(s: int, m: int, p: int = 1) -> tuple:
     """(keep, per_restart) of the thick-restart drivers below: each restart
-    keeps ``keep`` Ritz pairs and extends by ``per_restart = m - keep``
-    matvecs. The single source of truth — the cost model's dispatch/restart
-    estimate (``analysis.variant_model``) derives from it too."""
+    keeps ``keep`` Ritz pairs (a multiple of the block size p, so restarts
+    stay block-aligned) and extends by ``per_restart = m - keep`` matvecs
+    (``per_restart // p`` block steps). The single source of truth — the
+    cost model's dispatch/collective/restart estimates
+    (``analysis.variant_model``) derive from it too."""
     keep = min(s + max((m - s) // 2, 1), m - 2)
+    if p > 1:
+        keep = min(-(-keep // p) * p, m - p)
     return keep, max(m - keep, 1)
+
+
+def _seed_block(v0, n: int, p: int, key, dtype):
+    """(n, p) starting block: v0 (or a random vector) in column 0, random
+    fill for the rest; orthonormalized by the caller (QR / filter+QR)."""
+    if v0 is None:
+        return jax.random.normal(key, (n, p), dtype)
+    v0 = jnp.asarray(v0, dtype)
+    if v0.ndim == 1:
+        if p == 1:
+            return v0[:, None]
+        rest = jax.random.normal(jax.random.fold_in(key, 1), (n, p - 1),
+                                 dtype)
+        return jnp.concatenate([v0[:, None], rest], axis=1)
+    assert v0.shape == (n, p), (v0.shape, n, p)
+    return v0
 
 
 def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
                   tol: float = 0.0, max_restarts: int = 500,
                   key: jax.Array | None = None, use_kernel: bool = False,
                   v0: jax.Array | None = None,
-                  callback=None, n: int | None = None) -> LanczosResult:
-    """Host-driven thick-restart Lanczos for s extremal eigenpairs of `op`.
+                  callback=None, n: int | None = None, p: int = 1,
+                  filter_degree: int = 0) -> LanczosResult:
+    """Host-driven thick-restart block Lanczos for s extremal eigenpairs.
 
-    `op` is an Operator pytree (ExplicitC/ImplicitC) or any matvec callable
-    w -> C w — the distributed path passes a ``dist_symv`` closure. For
-    callables, the problem dimension comes from `v0` (or the explicit `n`).
+    `op` is an Operator pytree (ExplicitC/ImplicitC) or any traceable
+    block-matvec callable X -> C X on (n, p) blocks (for ``p == 1`` a
+    plain ``lambda v: C @ v`` works on the (n, 1) column). For callables,
+    the problem dimension comes from `v0` (or the explicit `n`).
     which: 'SA' (smallest algebraic) or 'LA' (largest algebraic).
     tol=0.0 reproduces ARPACK's default (machine precision criterion).
-    `callback(k_restart, V, T, j)` enables checkpoint hooks (see dist/).
+    ``p`` is the block / s-step size: each segment step advances p basis
+    vectors with ONE fused multi-RHS matvec. ``filter_degree > 0``
+    Chebyshev-filters the starting block (degree-d polynomial damping the
+    unwanted end; bounds from a k-step probe — see ``core.filtering``),
+    which is what makes clustered spectra converge inside the budget.
+    `callback(k_restart, V, T, m)` enables checkpoint hooks (see dist/).
 
-    Per restart the host issues O(1) device dispatches: one jitted m-step
-    segment, one ``_restart_math``, and a single-scalar ``jax.device_get``
-    for the convergence verdict.
+    Per restart the host issues O(1) device dispatches: one jitted
+    whole-segment program, one ``_restart_math``, and a single-scalar
+    ``jax.device_get`` for the convergence verdict.
     """
     if isinstance(op, (ExplicitC, ImplicitC)):
         n = op_dim(op)
         dtype = (op.C if isinstance(op, ExplicitC) else op.A).dtype
+        matvec = lambda X: apply_op(op, X, use_kernel=use_kernel)  # noqa: E731
     else:
         if n is None:
             if v0 is None:
                 raise ValueError("callable op needs `v0` or `n`")
             n = v0.shape[0]
         dtype = v0.dtype if v0 is not None else jnp.float64
+        matvec = op
     if m is None:
-        m = default_subspace(s, n)
-    assert 2 * s < m + 1 <= n + 1, (s, m, n)
-    keep, _ = restart_schedule(s, m)
-    segment = _make_segment(op, use_kernel)
+        m = default_subspace(s, n, p)
+    assert m % p == 0 and m + p <= n + (1 if p == 1 else 0), (m, p, n)
+    assert 2 * s < m + 1, (s, m)
+    keep, _ = restart_schedule(s, m, p)
+    segment = _make_segment(op, use_kernel, p)
     eps = float(jnp.finfo(dtype).eps)
     tol_eff = tol if tol > 0.0 else eps
 
     if key is None:
         key = jax.random.PRNGKey(272727)
-    V = jnp.zeros((n, m + 1), dtype)
-    T = jnp.zeros((m + 1, m + 1), dtype)
-    if v0 is None:
-        v0 = jax.random.normal(key, (n,), dtype)
-    V = V.at[:, 0].set(v0 / jnp.linalg.norm(v0))
-
+    X0 = _seed_block(v0, n, p, key, dtype)
     n_matvec = 0
+    if filter_degree > 0:
+        from .filtering import (chebyshev_filter_jit, estimate_bounds_jit,
+                                filter_interval, probe_steps)
+        kb = probe_steps(s, n)
+        theta_p, beta_k = _dispatch(estimate_bounds_jit, matvec,
+                                    jax.random.normal(
+                                        jax.random.fold_in(key, 2), (n,),
+                                        dtype), kb)
+        a, b, a0 = filter_interval(theta_p, beta_k, s, which)
+        X0 = _dispatch(chebyshev_filter_jit, matvec, X0, filter_degree,
+                       a, b, a0)
+        n_matvec += kb + filter_degree * p
+    V = jnp.zeros((n, m + p), dtype)
+    T = jnp.zeros((m + p, m + p), dtype)
+    Q0, _ = _qr_posdiag(X0)
+    V = V.at[:, :p].set(Q0)
+
     j0 = 0
     theta = S = resid = None
     for k_restart in range(max_restarts):
-        V, T, beta = _dispatch(segment, V, T, jnp.asarray(j0))
-        n_matvec += m - j0
+        V, T, B_q = _dispatch(segment, V, T, jnp.asarray(j0))
+        n_matvec += m - j0 * p
         theta, S, resid, V_restart, T_new, all_conv = _dispatch(
-            _restart_math, V, T, beta, jnp.asarray(tol_eff, dtype),
-            s=s, keep=keep, m=m, which=which)
+            _restart_math, V, T, B_q, jnp.asarray(tol_eff, dtype),
+            s=s, keep=keep, m=m, p=p, which=which)
         if callback is not None:
             callback(k_restart, V, T, m)
         if bool(jax.device_get(all_conv)):
@@ -229,7 +320,7 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
                                  True, resid[:s])
         # thick restart
         V, T = V_restart, T_new
-        j0 = keep
+        j0 = keep // p
 
     evecs = V[:, :m] @ S[:, :s]
     evecs, _ = jnp.linalg.qr(evecs)
@@ -238,26 +329,41 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
 
 
 # ---------------------------------------------------------------------------
-# fully jitted driver (fixed trip counts) for the distributed/dry-run path
+# fully jitted driver (fixed trip counts) for the batched/dry-run path
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("s", "m", "which", "max_restarts",
-                                   "use_kernel"))
+                                   "use_kernel", "p", "filter_degree"))
 def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
                       which: str = "SA", max_restarts: int = 50,
-                      use_kernel: bool = False):
-    """lax.while_loop thick-restart Lanczos; lowers to a single XLA program.
+                      use_kernel: bool = False, p: int = 1,
+                      filter_degree: int = 0):
+    """lax.while_loop thick-restart block Lanczos; ONE XLA program.
 
-    Returns (evals (s,), evecs (n, s), n_restarts_used, converged).
+    ``v0`` is (n,) for p == 1 or an (n, p) starting block. Returns
+    (evals (s,), evecs (n, s), n_restarts_used, converged). Shares the
+    block segment/restart core with ``lanczos_solve`` — the two drivers
+    cannot drift.
     """
     n = v0.shape[0]
     dtype = v0.dtype
     eps = jnp.finfo(dtype).eps
-    keep, _ = restart_schedule(s, m)
+    assert m % p == 0, (m, p)
+    keep, _ = restart_schedule(s, m, p)
+    matvec = lambda X: apply_op(op, X, use_kernel=use_kernel)  # noqa: E731
 
-    V0 = jnp.zeros((n, m + 1), dtype).at[:, 0].set(v0 / jnp.linalg.norm(v0))
-    T0 = jnp.zeros((m + 1, m + 1), dtype)
-    matvec = lambda v: apply_op(op, v, use_kernel=use_kernel)  # noqa: E731
+    X0 = v0[:, None] if v0.ndim == 1 else v0
+    assert X0.shape == (n, p), (X0.shape, p)
+    if filter_degree > 0:
+        from .filtering import (chebyshev_filter, estimate_bounds,
+                                filter_interval, probe_steps)
+        kb = probe_steps(s, n)
+        theta_p, beta_k = estimate_bounds(matvec, X0[:, 0], kb)
+        a, b, a0 = filter_interval(theta_p, beta_k, s, which)
+        X0 = chebyshev_filter(matvec, X0, filter_degree, a, b, a0)
+    Q0, _ = _qr_posdiag(X0)
+    V0 = jnp.zeros((n, m + p), dtype).at[:, :p].set(Q0)
+    T0 = jnp.zeros((m + p, m + p), dtype)
 
     def cond(state):
         k, _, _, _, converged, _, _ = state
@@ -265,13 +371,13 @@ def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
 
     def body(state):
         k, V, T, j0_val, _, _, _ = state
-        V, T, beta = _segment_impl(matvec, V, T, j0_val)
+        V, T, B_q = _segment_impl(matvec, V, T, j0_val, p)
         theta, S, resid, V_restart, T_new, conv = _restart_math(
-            V, T, beta, eps, s, keep, m, which
+            V, T, B_q, eps, s, keep, m, p, which
         )
         evecs = V[:, :m] @ S[:, :s]
-        return (k + 1, V_restart, T_new, jnp.asarray(keep), conv, theta[:s],
-                evecs)
+        return (k + 1, V_restart, T_new, jnp.asarray(keep // p), conv,
+                theta[:s], evecs)
 
     state0 = (jnp.asarray(0), V0, T0, jnp.asarray(0), jnp.asarray(False),
               jnp.zeros((s,), dtype), jnp.zeros((n, s), dtype))

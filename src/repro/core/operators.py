@@ -32,22 +32,31 @@ class ImplicitC(NamedTuple):
 Operator = Union[ExplicitC, ImplicitC]
 
 
+def _symm(M: jax.Array, w: jax.Array, use_kernel: bool) -> jax.Array:
+    """y = M w for a vector or an (n, p) block — the block Lanczos core
+    feeds whole blocks through ONE fused multi-RHS product (SYMM/GEMM)
+    instead of p SYMVs."""
+    if use_kernel:
+        from repro.kernels.symv import ops as symv_ops
+        if w.ndim == 1:
+            return symv_ops.symv(M, w)
+        return symv_ops.symm_block(M, w)
+    return M @ w
+
+
 def apply_op(op: Operator, w: jax.Array, use_kernel: bool = False) -> jax.Array:
-    """One operator application; the hot loop of KE (KE1) / KI (KI1-KI3)."""
+    """One operator application; the hot loop of KE (KE1) / KI (KI1-KI3).
+
+    ``w`` may be a vector (n,) or an (n, p) Lanczos block; every stage
+    (SYMM and the triangular solves) handles the multi-RHS case natively.
+    """
     if isinstance(op, ExplicitC):
-        if use_kernel:
-            from repro.kernels.symv import ops as symv_ops
-            return symv_ops.symv(op.C, w)
-        return op.C @ w
+        return _symm(op.C, w, use_kernel)
     if isinstance(op, ImplicitC):
         # KI1: wbar = U^{-1} w
         wbar = _solve_tri(op.U, w, trans=0, lower=False)
         # KI2: what = A wbar
-        if use_kernel:
-            from repro.kernels.symv import ops as symv_ops
-            what = symv_ops.symv(op.A, wbar)
-        else:
-            what = op.A @ wbar
+        what = _symm(op.A, wbar, use_kernel)
         # KI3: z = U^{-T} what
         return _solve_tri(op.U, what, trans=1, lower=False)
     raise TypeError(f"unknown operator {type(op)}")

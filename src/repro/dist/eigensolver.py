@@ -6,8 +6,13 @@ through ``sharded_la``:
 KE (``solve_ke_distributed``):
   GS1  U = dist_cholesky(B)                  (row-block panels)
   GS2  C = U^{-T} A U^{-1}                   (two dist_trsm_left_t solves)
-  KE1  thick-restart Lanczos on C            (matvec = dist_symv; the
-       projected (m x m) problem stays replicated — it is tiny)
+  KE1  communication-avoiding block Lanczos  (ONE shard_map-ped jitted
+       program per thick restart — the whole s-step segment loop plus the
+       restart math — with TWO collectives per (n, p) block step: the
+       matvec psum over 'model' and the row all_gather that doubles as
+       the broadcast; see ``ke_restart_program``. An optional Chebyshev
+       prep program filters the starting block so clustered spectra
+       converge inside the restart budget.)
   BT1  X = U^{-1} Y                          (dist_trsm_left)
 
 TT (``solve_tt_distributed``, the ELPA2-style two-stage path):
@@ -31,23 +36,30 @@ restart logic. ``core.gsyeig.solve(..., mesh=...)`` dispatches here.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.filtering import (chebyshev_filter, estimate_bounds,
+                                  filter_interval, probe_steps)
 from repro.core.instrument import DispatchCounter
-from repro.core.lanczos import default_subspace, lanczos_solve
+from repro.core.lanczos import (_qr_posdiag, _restart_math, _segment_impl,
+                                default_subspace, lanczos_solve,
+                                restart_schedule)
 from repro.core.linalg_utils import symmetrize
+from repro.core.operators import ExplicitC
 from repro.core.sbr import (_jit_house_panel, _jit_pack, _jit_slice_cols,
                             _n_panels, apply_q2, band_chase)
 from repro.core.tridiag_eig import eigh_tridiag_selected
-from .sharded_la import (_n_row_shards, _row_spec, _row_sharded,
+from .sharded_la import (_n_row_shards, _row_axes, _row_spec, _row_sharded,
                          band_sweep_program, dist_apply_wy_right,
                          dist_apply_wy_two_sided, dist_cholesky,
-                         dist_panel_matmul, dist_symv, dist_trsm_left,
+                         dist_panel_matmul, dist_trsm_left,
                          dist_trsm_left_t)
 
 
@@ -71,6 +83,108 @@ def _standard_form(mesh, A, B, timed):
     return U, 0.5 * (C + C.T)
 
 
+def _mesh_tiling(mesh, n: int):
+    """(row_spec, gather_axes, n_row_shards, model_size) plus whether n
+    tiles evenly over both mesh dimensions (the fused programs' layout)."""
+    rs = _row_spec(mesh)
+    row_axes = _row_axes(mesh)
+    ax = row_axes if len(row_axes) > 1 else (row_axes[0] if row_axes else None)
+    R = max(_n_row_shards(mesh), 1)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cm = sizes.get("model", 1)
+    return rs, ax, R, cm, (n % R == 0 and n % cm == 0)
+
+
+def _fused_block_matvec(c_blk, ncm: int, ax):
+    """The communication-avoiding W = C X on an (n, p) replicated block,
+    from inside a shard_map region with C 2-D-sharded (rows x 'model').
+
+    Exactly TWO collectives: each device multiplies its (nloc, ncm) tile
+    against its 'model' slice of X, ONE psum over 'model' completes the
+    row block, and ONE all_gather over the row axes rebuilds the
+    replicated (n, p) result — which doubles as the broadcast for the
+    redundantly-computed orthogonalization/restart math (the
+    ``band_sweep_program`` trick), so the O(n m p) small-matrix work costs
+    zero extra collectives. Compare one psum per matvec (2 p collectives
+    per block step) in the old per-``dist_symv`` path.
+    """
+    def matvec(X):
+        mi = jax.lax.axis_index("model")
+        Xs = jax.lax.dynamic_slice_in_dim(X, mi * ncm, ncm, axis=0)
+        Wp = jax.lax.psum(c_blk @ Xs, "model")
+        if ax is not None:
+            Wp = jax.lax.all_gather(Wp, ax, axis=0, tiled=True)
+        return Wp
+    return matvec
+
+
+@functools.lru_cache(maxsize=None)
+def ke_restart_program(mesh, n: int, p: int, m: int, s: int, keep: int,
+                       which: str, dtype_name: str):
+    """ONE ``shard_map``-ped jitted program per thick restart (KE1).
+
+    The whole block-Lanczos segment — every (n, p) block step with its
+    two-collective fused matvec, the two-pass re-orthogonalization, and
+    the residual-block QR — runs as a ``lax.fori_loop`` inside a single
+    shard_map region, followed by the replicated restart math (eigh of
+    T_m, Ritz residual bounds, thick-restart state) and the Ritz-vector
+    assembly. The host issues one dispatch per restart and fetches a
+    single convergence scalar: the same dispatch discipline
+    ``band_sweep_program`` gives TT1, applied to the Krylov side.
+
+    Returns a jitted ``(C, V, T, j0, tol_eff) ->
+    (theta (s,), resid (s,), V', T', converged, evecs (n, s))`` callable;
+    V/T are donated. Requires n divisible by both mesh tilings
+    (``solve_ke_distributed`` falls back to a replicated operator else).
+    """
+    rs, ax, R, cm, ok = _mesh_tiling(mesh, n)
+    assert ok, (n, R, cm)
+    ncm = n // cm
+
+    def local(c_blk, V, T, j0, tol_eff):
+        matvec = _fused_block_matvec(c_blk, ncm, ax)
+        V, T, B_q = _segment_impl(matvec, V, T, j0, p)
+        theta, S, resid, V_r, T_new, conv = _restart_math(
+            V, T, B_q, tol_eff, s=s, keep=keep, m=m, p=p, which=which)
+        evecs, _ = jnp.linalg.qr(V[:, :m] @ S[:, :s])
+        return theta[:s], resid[:s], V_r, T_new, conv, evecs
+
+    prog = shard_map(local, mesh=mesh,
+                     in_specs=(P(rs, "model"), P(None, None), P(None, None),
+                               P(), P()),
+                     out_specs=(P(None), P(None), P(None, None),
+                                P(None, None), P(), P(None, None)),
+                     check_rep=False)
+    return jax.jit(prog, donate_argnums=(1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def ke_prep_program(mesh, n: int, p: int, kb: int, degree: int, s: int,
+                    which: str, dtype_name: str):
+    """ONE fused program for the Chebyshev prep: the kb-step bound probe,
+    the interval selection, the degree-d filter recurrence on the (n, p)
+    starting block, and its orthonormalization — every matvec the fused
+    two-collective kind, every small step replicated. One host dispatch
+    total, so filtering never reintroduces a per-matvec round trip."""
+    rs, ax, R, cm, ok = _mesh_tiling(mesh, n)
+    assert ok, (n, R, cm)
+    ncm = n // cm
+
+    def local(c_blk, X0):
+        matvec = _fused_block_matvec(c_blk, ncm, ax)
+        theta, beta_k = estimate_bounds(matvec, X0[:, 0], kb)
+        a, b, a0 = filter_interval(theta, beta_k, s, which)
+        Xf = chebyshev_filter(matvec, X0, degree, a, b, a0)
+        Q0, _ = _qr_posdiag(Xf)
+        return Q0
+
+    prog = shard_map(local, mesh=mesh,
+                     in_specs=(P(rs, "model"), P(None, None)),
+                     out_specs=P(None, None),
+                     check_rep=False)
+    return jax.jit(prog)
+
+
 def solve_ke_distributed(
     mesh,
     A: jax.Array,
@@ -82,45 +196,113 @@ def solve_ke_distributed(
     max_restarts: int = 500,
     key: Optional[jax.Array] = None,
     return_info: bool = False,
+    p: int = 4,
+    filter_degree: int = 0,
+    invert: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """s extremal eigenpairs of A X = B X Lambda on a 2-D device mesh.
+
+    The Krylov stage is the communication-avoiding block Lanczos: one
+    fused ``shard_map`` program per thick restart (``ke_restart_program``)
+    with two collectives per (n, ``p``) block step. ``filter_degree > 0``
+    Chebyshev-filters the starting block (one extra fused program);
+    ``invert=True`` applies the paper's MD trick in-place — solve the
+    inverse pair (B, A) for its LARGEST eigenpairs and map back — which is
+    what makes the log-spaced MD spectrum converge fast at its tiny end.
 
     Returns ``(evals (s,) ascending, X (n, s) B-orthonormal)``; with
     ``return_info=True`` a third dict carries per-stage wall-clock times
     and Lanczos counters (n_matvec, n_restart, converged).
     """
+    B_orig = B
+    if invert:
+        A, B = B, A
+        which = "largest" if which == "smallest" else "smallest"
     n = A.shape[0]
     if m is None:
-        m = default_subspace(s, n)
+        m = default_subspace(s, n, p)
+    assert m % p == 0, (m, p)
     if key is None:
         key = jax.random.PRNGKey(20120520)
     times = {}
     timed = _make_timer(times)
 
     U, C = _standard_form(mesh, A, B, timed)
-    # the Krylov operand lives 2-D-sharded: rows over data axes, cols over
-    # 'model' — the layout dist_symv consumes
-    C = jax.device_put(C, NamedSharding(mesh, P(_row_spec(mesh), "model")))
-
     arp_which = "SA" if which == "smallest" else "LA"
-    v0 = jax.random.normal(key, (n,), C.dtype)
+    dtype = C.dtype
+    keep, _ = restart_schedule(s, m, p)
+    rs, ax, R, cm, divisible = _mesh_tiling(mesh, n)
+
     t0 = time.perf_counter()
-    res = lanczos_solve(lambda w: dist_symv(mesh, C, w), s, which=arp_which,
-                        m=m, tol=tol, max_restarts=max_restarts, v0=v0)
-    jax.block_until_ready(res.evecs)
+    if not divisible:
+        # uneven tilings cannot shard_map; keep GS1/GS2/BT1 distributed and
+        # run the (block) Lanczos stage on the replicated operator — still
+        # the shared core, just without the mesh collectives
+        C_rep = jax.device_put(C, NamedSharding(mesh, P(None, None)))
+        res = lanczos_solve(ExplicitC(C_rep), s, which=arp_which, m=m,
+                            tol=tol, max_restarts=max_restarts, key=key,
+                            p=p, filter_degree=filter_degree)
+        lam, Y = res.evals, res.evecs
+        n_matvec, n_restart = res.n_matvec, res.n_restart
+        converged = res.converged
+    else:
+        # the Krylov operand lives 2-D-sharded: rows over data axes, cols
+        # over 'model' — the layout the fused block matvec consumes
+        C = jax.device_put(C, NamedSharding(mesh, P(rs, "model")))
+        rep = NamedSharding(mesh, P(None, None))
+        dname = jnp.dtype(dtype).name
+        X0 = jax.device_put(
+            jax.random.normal(key, (n, p), dtype), rep)
+        n_matvec = 0
+        if filter_degree > 0:
+            kb = probe_steps(s, n)
+            prep = ke_prep_program(mesh, n, p, kb, filter_degree, s,
+                                   arp_which, dname)
+            Q0 = _dispatch(prep, C, X0)
+            n_matvec += kb + filter_degree * p
+        else:
+            Q0, _ = _qr_posdiag(X0)
+        V = jax.device_put(
+            jnp.zeros((n, m + p), dtype).at[:, :p].set(Q0), rep)
+        T = jax.device_put(jnp.zeros((m + p, m + p), dtype), rep)
+        eps = float(jnp.finfo(dtype).eps)
+        tol_eff = jnp.asarray(tol if tol > 0.0 else eps, dtype)
+        prog = ke_restart_program(mesh, n, p, m, s, keep, arp_which, dname)
+        j0 = 0
+        converged = False
+        n_restart = max_restarts
+        for k_restart in range(max_restarts):
+            lam, resid, V, T, conv, Y = _dispatch(
+                prog, C, V, T, jnp.asarray(j0), tol_eff)
+            n_matvec += m - j0 * p
+            j0 = keep // p
+            if bool(jax.device_get(conv)):
+                converged = True
+                n_restart = k_restart + 1
+                break
+    jax.block_until_ready(Y)
     times["KE_iter"] = time.perf_counter() - t0
 
-    lam, Y = res.evals, res.evecs
     order = jnp.argsort(lam)
     lam, Y = lam[order], Y[:, order]
 
     # BT1: X = U^{-1} Y
     X = timed("BT1", lambda y: dist_trsm_left(mesh, U, y), Y)
 
+    if invert:
+        lam = 1.0 / lam
+        order = jnp.argsort(lam)
+        lam, X = lam[order], X[:, order]
+        from repro.core.residuals import b_normalize
+        X = b_normalize(X, jax.device_put(
+            B_orig, NamedSharding(mesh, P(None, None))))
+
     if return_info:
-        info = {"stage_times": times, "n_matvec": int(res.n_matvec),
-                "n_restart": int(res.n_restart),
-                "converged": bool(res.converged)}
+        info = {"stage_times": times, "n_matvec": int(n_matvec),
+                "n_restart": int(n_restart),
+                "converged": bool(converged),
+                "p": int(p), "filter_degree": int(filter_degree),
+                "fused": bool(divisible)}
         return lam, X, info
     return lam, X
 

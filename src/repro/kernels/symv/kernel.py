@@ -103,3 +103,46 @@ def symv_pallas(A: jax.Array, x: jax.Array, block: int = 512,
         interpret=interpret,
     )(jnp.asarray(ib), jnp.asarray(jb), A, x, x)
     return y_up + y_lo
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def symm_block_pallas(A: jax.Array, X: jax.Array, block: int = 512,
+                      interpret: bool = True) -> jax.Array:
+    """Y = A X for symmetric A and an (n, p) block of RHS vectors, reading
+    only the upper triangle of A — the fused multi-RHS matvec of the block
+    Lanczos core (KE1 over a whole s-step block in ONE kernel pass).
+
+    The kernel body is exactly ``_symv_kernel``: every tile contribution is
+    a (block, block) @ (block, p) matmul instead of a mat-vec, so the same
+    one-triangle streaming halves HBM traffic while the MXU amortizes the
+    tile read over p right-hand sides (arithmetic intensity grows p-fold —
+    this is what makes the block method compute- rather than
+    bandwidth-bound). Requires n % block == 0 (ops.py pads); p rides along
+    unblocked (ops.py pads it to the lane granularity on a real TPU).
+    """
+    n = A.shape[0]
+    p = X.shape[1]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    ib, jb = triangle_indices(nb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(len(ib),),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda t, ib, jb: (ib[t], jb[t])),
+            pl.BlockSpec((block, p), lambda t, ib, jb: (jb[t], 0)),
+            pl.BlockSpec((block, p), lambda t, ib, jb: (ib[t], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, p), lambda t, ib, jb: (ib[t], 0)),
+            pl.BlockSpec((block, p), lambda t, ib, jb: (jb[t], 0)),
+        ],
+    )
+    y_up, y_lo = pl.pallas_call(
+        _symv_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n, p), A.dtype)] * 2,
+        interpret=interpret,
+    )(jnp.asarray(ib), jnp.asarray(jb), A, X, X)
+    return y_up + y_lo

@@ -11,8 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import symv_pallas
-from .ref import symv_ref
+from .kernel import symm_block_pallas, symv_pallas
+from .ref import symm_block_ref, symv_ref
 
 
 def _on_tpu() -> bool:
@@ -43,20 +43,7 @@ def symv(A: jax.Array, x: jax.Array, block: int = 256,
     #    ties to the larger block. n=300 -> 3 tiles of 128, 384 padded.
     # (The other wrappers pad to fixed 128-tiles (gemm, syr2k), a divisor
     # of n (band_mv), or min(block, n) (trsm).)
-    g = 8 if interpret else 128
-    if interpret:
-        nb = -(-n // max(g, block))
-        per = -(-n // nb)
-        block = max(g, -(-per // g) * g)
-    else:
-        k_max = max(1, min(block, -(-n // g) * g) // g)
-        best_block, best_padded = g, -(-n // g) * g
-        for k in range(2, k_max + 1):
-            b = g * k
-            padded = -(-n // b) * b
-            if padded <= best_padded:  # ties -> larger block
-                best_block, best_padded = b, padded
-        block = best_block
+    block = _pick_block(n, block, interpret)
     pad = (-n) % block
     if pad:
         A = jnp.pad(A, ((0, pad), (0, pad)))
@@ -65,4 +52,45 @@ def symv(A: jax.Array, x: jax.Array, block: int = 256,
     return y[:n]
 
 
-__all__ = ["symv", "symv_ref"]
+def _pick_block(n: int, block: int, interpret: bool) -> int:
+    """The symv pad-target heuristic (see the comment above), factored so
+    the multi-RHS wrapper shares it verbatim."""
+    g = 8 if interpret else 128
+    if interpret:
+        nb = -(-n // max(g, block))
+        per = -(-n // nb)
+        return max(g, -(-per // g) * g)
+    k_max = max(1, min(block, -(-n // g) * g) // g)
+    best_block, best_padded = g, -(-n // g) * g
+    for k in range(2, k_max + 1):
+        b = g * k
+        padded = -(-n // b) * b
+        if padded <= best_padded:  # ties -> larger block
+            best_block, best_padded = b, padded
+    return best_block
+
+
+@functools.partial(jax.jit, static_argnames=("block", "force_interpret"))
+def symm_block(A: jax.Array, X: jax.Array, block: int = 256,
+               force_interpret: bool | None = None) -> jax.Array:
+    """Y = A X for symmetric A and an (n, p) RHS block via the one-triangle
+    Pallas kernel — the block-Lanczos fused matvec (p SYMVs in one pass).
+
+    Pads n up to a block multiple exactly like ``symv``; on a real TPU the
+    RHS count p is additionally padded up to the 128-lane granularity
+    (interpret mode runs p as-is). Zero padding is exact for the product.
+    """
+    n = A.shape[0]
+    p = X.shape[1]
+    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+    blk = _pick_block(n, block, interpret)
+    pad = (-n) % blk
+    pad_p = 0 if interpret else (-p) % 128
+    if pad or pad_p:
+        A = jnp.pad(A, ((0, pad), (0, pad)))
+        X = jnp.pad(X, ((0, pad), (0, pad_p)))
+    Y = symm_block_pallas(A, X, block=blk, interpret=interpret)
+    return Y[:n, :p]
+
+
+__all__ = ["symv", "symm_block", "symv_ref", "symm_block_ref"]

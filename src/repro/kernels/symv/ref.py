@@ -16,3 +16,15 @@ def symv_upper_ref(A, x):
     U = jnp.triu(A)
     strict = jnp.triu(A, 1)
     return U @ x + strict.T @ x
+
+
+def symm_block_ref(A, X):
+    """Multi-RHS oracle: Y = A X for an (n, p) block."""
+    return A @ X
+
+
+def symm_block_upper_ref(A, X):
+    """One-triangle multi-RHS oracle (mirrors ``symv_upper_ref``)."""
+    U = jnp.triu(A)
+    strict = jnp.triu(A, 1)
+    return U @ X + strict.T @ X

@@ -79,6 +79,16 @@ def main() -> None:
     ap.add_argument("--band-width", type=int, default=8)
     ap.add_argument("--m", type=int, default=None)
     ap.add_argument("--max-restarts", type=int, default=300)
+    ap.add_argument("--p", type=int, default=None, dest="krylov_block",
+                    help="Lanczos block size (s-step width); default: 4 "
+                         "on a mesh, 1 locally")
+    ap.add_argument("--filter-degree", type=int, default=None,
+                    help="Chebyshev start-filter degree (KE/KI); default: "
+                         "16 on clustered spectra, else off; 0 forces off")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="Lanczos residual tolerance (0 = machine-eps "
+                         "criterion; 1e-9 is the converging setting on "
+                         "the paper's spectra)")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL mesh (e.g. 4x2): run the KE or TT "
                          "variant (or --variant auto, restricted to those "
@@ -98,7 +108,8 @@ def main() -> None:
     res = solve(prob.A, prob.B, args.s, variant=args.variant,
                 which=args.which, invert=args.invert, gs2=args.gs2,
                 td1=args.td1, band_width=args.band_width, m=args.m,
-                max_restarts=args.max_restarts, mesh=mesh,
+                max_restarts=args.max_restarts, mesh=mesh, tol=args.tol,
+                krylov_block=args.krylov_block, filter=args.filter_degree,
                 # the router's clustered-spectrum hint: the DFT generator's
                 # low end is the paper's slow-Lanczos regime
                 clustered=(args.problem == "dft"

@@ -7,6 +7,7 @@ import pytest
 from repro.analysis.variant_model import (DISTRIBUTED_VARIANTS, MachineParams,
                                           VARIANTS, choose_variant,
                                           estimate_lanczos_iters,
+                                          estimate_lanczos_restarts,
                                           predict_stage_times, stage_costs)
 from repro.core import solve
 from repro.data.problems import dft_like, md_like
@@ -38,25 +39,47 @@ GOLDEN = [
     ((17243, 448, (4, 2), False), "TT"),
     ((512, 8, (4, 2), False), "KE"),
     # the BENCH_variant_race config (n=128, s=4, 8 host devices): TT on
-    # both generators — with t_dispatch calibrated the gap only widens
-    # (KE pays ~3 dispatches x 300 restarts, the fused TT1 sweep pays 2)
+    # both generators — at this tiny n the 2-dispatch fused TT1 sweep wins
+    # on raw roofline. The old rationale ("KE pays ~3 dispatches x 300
+    # restarts") is gone: the fused per-restart program pays restarts + 2
+    # dispatches and the block matvec 2 collectives per block step, but a
+    # 128x128 pencil is still cheaper to reduce outright.
     ((128, 4, (4, 2), False), "TT"),
     ((128, 4, (4, 2), True), "TT"),
+    # block-KE entries (optional 5th tuple element = choose_variant kwargs):
+    # with p=4 dividing the collective-latency term and a degree-16
+    # Chebyshev start filter cutting the clustered iteration estimate to
+    # ~1/3, the Krylov side wins the clustered s << n regime it used to
+    # auto-lose — the headline flip of the communication-avoiding rework
+    ((17243, 100, (4, 2), True, {"krylov_block": 4, "filter_degree": 16}),
+     "KE"),
+    ((17243, 100, None, True, {"krylov_block": 4, "filter_degree": 16}),
+     "KE"),
 ]
+
+
+def _golden_args(args):
+    n, s, mesh_shape, clustered = args[:4]
+    kw = args[4] if len(args) > 4 else {}
+    return n, s, mesh_shape, clustered, kw
 
 
 @pytest.mark.parametrize("args,expected", GOLDEN,
                          ids=[f"n{a[0]}_s{a[1]}_mesh{a[2]}_cl{a[3]}"
+                              + ("_blk" if len(a) > 4 else "")
                               for a, _ in GOLDEN])
 def test_golden_decision_table(args, expected):
-    n, s, mesh_shape, clustered = args
-    choice = choose_variant(n, s, mesh_shape=mesh_shape, clustered=clustered)
+    n, s, mesh_shape, clustered, kw = _golden_args(args)
+    choice = choose_variant(n, s, mesh_shape=mesh_shape, clustered=clustered,
+                            **kw)
     assert choice.variant == expected, choice.table
 
 
 def test_choice_invariants():
-    for (n, s, mesh_shape, clustered), _ in GOLDEN:
-        c = choose_variant(n, s, mesh_shape=mesh_shape, clustered=clustered)
+    for args, _ in GOLDEN:
+        n, s, mesh_shape, clustered, kw = _golden_args(args)
+        c = choose_variant(n, s, mesh_shape=mesh_shape, clustered=clustered,
+                           **kw)
         allowed = (DISTRIBUTED_VARIANTS
                    if mesh_shape and np.prod(mesh_shape) > 1 else VARIANTS)
         assert set(c.table) == set(allowed)
@@ -95,6 +118,26 @@ def test_iteration_estimate_monotone():
     clustered = estimate_lanczos_iters(4096, 32, clustered=True)
     assert clustered > base
     assert estimate_lanczos_iters(4096, 128) >= base
+
+
+def test_block_and_filter_knobs_move_ke():
+    """The communication-avoiding knobs do what the model claims: raising
+    the Lanczos block size p divides the collective count (2 per p-column
+    block step) without inflating the matvec work proportionally, and a
+    Chebyshev start filter cuts the clustered-spectrum iteration estimate.
+    Dispatches follow the fused per-restart program: restarts + 2."""
+    n, s = 17243, 100
+    ke1 = stage_costs("KE", n, s, clustered=True)["KE_iter"]
+    ke4 = stage_costs("KE", n, s, clustered=True, p=4)["KE_iter"]
+    assert ke4.collectives < 0.6 * ke1.collectives
+    assert ke4.flops < 1.5 * ke1.flops
+    it_plain = estimate_lanczos_iters(n, s, clustered=True)
+    it_filt = estimate_lanczos_iters(n, s, clustered=True, filter_degree=16)
+    assert it_filt < it_plain
+    # dispatch count is restart-shaped, not matvec-shaped
+    ke_known = stage_costs("KE", 128, 4, m=48, n_iter=6626)["KE_iter"]
+    assert ke_known.dispatches == pytest.approx(
+        2 + estimate_lanczos_restarts(6626, 4, 48))
 
 
 def test_more_devices_never_slower():
