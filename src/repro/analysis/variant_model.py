@@ -43,6 +43,7 @@ import math
 from typing import Dict, Optional, Sequence
 
 from repro.core.lanczos import default_subspace, restart_schedule
+from repro.kernels.tridiag_eig.ops import SCAN_UNROLL as _TT3_UNROLL
 
 from .roofline import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16, cost_analysis_dict
 
@@ -275,6 +276,37 @@ def _mesh_devices(mesh_shape: Optional[Sequence[int]]) -> int:
     return p
 
 
+def _tridiag_eig_cost(n: int, s: int, b: int, bisect_iters: int = 80,
+                      invit_rounds: int = 3,
+                      unroll: int = _TT3_UNROLL) -> StageCost:
+    """TT3/TD2: Sturm bisection + shifted inverse iteration, modeling the
+    fused 'batched' path of ``core.tridiag_eig`` (the default both direct
+    pipelines run) instead of the old flat ``60 n s`` placeholder.
+
+    Flops: ``bisect_iters`` interval-halving sweeps at ~5 flops per
+    (row, index lane), then per inverse-iteration round the pivoted
+    tridiagonal factor+solve (~12 flops per (row, shift)) and the
+    cluster-wise MGS (~4 n s per column). Bytes: each sweep streams the
+    O(n) diagonals across all lanes; each round streams the O(n s)
+    iterate a small number of times. The serial trip count is what the
+    measured wall is made of on a host backend: each bisection sweep is
+    one Sturm scan of ``ceil(n / unroll)`` steps (the unroll is the
+    fused path's whole speedup — it divides this term and only this
+    term), and each round pays the three length-n solve scans
+    (factor / forward / backward) plus the per-column MGS loop. One
+    fused program, hence one dispatch.
+    """
+    bisect_flops = bisect_iters * 5.0 * n * s
+    invit_flops = invit_rounds * (12.0 * n * s + 4.0 * n * s * s)
+    bisect_bytes = bisect_iters * (n + s) * b
+    invit_bytes = invit_rounds * 6.0 * n * s * b
+    loop_steps = (bisect_iters * math.ceil(n / max(unroll, 1))
+                  + invit_rounds * (3.0 * n + s))
+    return StageCost(bisect_flops + invit_flops,
+                     bisect_bytes + invit_bytes, 0.0, 1,
+                     0.0, float(loop_steps))
+
+
 def _chase_loop_steps(n: int, w: int) -> float:
     """Sequential wavefront steps of the TT2 bulge chase (core.sbr).
 
@@ -350,7 +382,7 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
         # TD1: BLAS-2 tridiagonalization — 4/3 n^3 flops but the trailing
         # matrix is streamed once per reflector: ~n^3/3 elements read.
         costs["TD1"] = StageCost(4 * n3 / 3.0, (n3 / 3.0) * b, 0.0, 1)
-        costs["TD2"] = StageCost(60.0 * n * s, 10.0 * n * s * b, 0.0, 1)
+        costs["TD2"] = _tridiag_eig_cost(n, s, b)
         costs["TD3"] = StageCost(4 * n2 * s, 3 * n2 * b, 0.0, 1)
     elif variant == "TT":
         # TT1: band reduction 4/3 n^3 + explicit Q1 accumulation 2 n^3,
@@ -378,7 +410,7 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
         # outlier behind the old calibration failures.
         costs["TT2"] = StageCost(6 * n2 * w, 6 * n2 * w * b / 8, 0.0, 1,
                                  0.0, _chase_loop_steps(n, w))
-        costs["TT3"] = StageCost(60.0 * n * s, 10.0 * n * s * b, 0.0, 1)
+        costs["TT3"] = _tridiag_eig_cost(n, s, b)
         # TT4: replay the ~n^2/2 sum 1/b recorded rotations over the (n, s)
         # Ritz slab (6s flops each), then one GEMM against the explicit Q1.
         # The replay shares TT2's serial character: one fused rotation

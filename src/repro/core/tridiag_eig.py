@@ -28,8 +28,15 @@ def _pivmin(d: jax.Array, e: jax.Array) -> jax.Array:
     return jnp.finfo(d.dtype).tiny / jnp.finfo(d.dtype).eps * scale
 
 
-def sturm_count(d: jax.Array, e: jax.Array, x: jax.Array) -> jax.Array:
-    """Number of eigenvalues of tridiag(d, e) strictly below x (scalar x)."""
+def sturm_count(d: jax.Array, e: jax.Array, x: jax.Array,
+                unroll: int = 1) -> jax.Array:
+    """Number of eigenvalues of tridiag(d, e) strictly below x (scalar x).
+
+    ``unroll`` unrolls the sequential Sturm recurrence ``unroll`` rows per
+    scan step — pure loop unrolling, so the result is bitwise identical for
+    every value; ``kernels/tridiag_eig`` uses it to amortize the per-step
+    loop overhead that dominates this stage off-TPU.
+    """
     pivmin = _pivmin(d, e)
     e2 = jnp.concatenate([jnp.zeros((1,), d.dtype), e * e])
 
@@ -43,19 +50,29 @@ def sturm_count(d: jax.Array, e: jax.Array, x: jax.Array) -> jax.Array:
         return (q, count), None
 
     init = (jnp.ones((), d.dtype), jnp.zeros((), jnp.int32))
-    (q, count), _ = jax.lax.scan(body, init, (d, e2))
+    (q, count), _ = jax.lax.scan(body, init, (d, e2), unroll=unroll)
     # first step used q_prev=1 with e2=0 so it's exact
     return count
 
 
-# vectorized over a batch of shift points
-sturm_counts = jax.vmap(sturm_count, in_axes=(None, None, 0))
+def sturm_counts(d: jax.Array, e: jax.Array, xs: jax.Array,
+                 unroll: int = 1) -> jax.Array:
+    """``sturm_count`` vectorized over a batch of shift points."""
+    return jax.vmap(lambda x: sturm_count(d, e, x, unroll=unroll))(xs)
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
+@partial(jax.jit, static_argnames=("max_iters", "unroll"))
 def bisect_eigenvalues(d: jax.Array, e: jax.Array, ks: jax.Array,
-                       max_iters: int = 80) -> jax.Array:
-    """k-th smallest eigenvalues (0-indexed, ks int array, any order)."""
+                       max_iters: int = 80, unroll: int = 1) -> jax.Array:
+    """k-th smallest eigenvalues, 0-indexed by the int array ``ks``.
+
+    ``ks`` may be in any order — each lane bisects its own index
+    independently and ``lam[i]`` answers ``ks[i]`` as given. (Downstream
+    ``inverse_iteration`` is NOT order-agnostic: its gap-based clustering
+    needs sorted shifts, which is why ``eigh_tridiag_selected``
+    sorts-and-restores.) ``unroll`` is bitwise-neutral loop unrolling of
+    the Sturm scans (see ``sturm_count``).
+    """
     lo0, hi0 = gershgorin_bounds(d, e)
     lo = jnp.full(ks.shape, lo0, d.dtype)
     hi = jnp.full(ks.shape, hi0, d.dtype)
@@ -63,7 +80,7 @@ def bisect_eigenvalues(d: jax.Array, e: jax.Array, ks: jax.Array,
     def body(_, lohi):
         lo, hi = lohi
         mid = 0.5 * (lo + hi)
-        cnt = sturm_counts(d, e, mid)
+        cnt = sturm_counts(d, e, mid, unroll=unroll)
         go_right = cnt <= ks  # lambda_k >= mid
         lo = jnp.where(go_right, mid, lo)
         hi = jnp.where(go_right, hi, mid)
@@ -197,10 +214,42 @@ class TridiagEigResult(NamedTuple):
 
 
 def eigh_tridiag_selected(d: jax.Array, e: jax.Array, ks: jax.Array,
-                          key: jax.Array | None = None) -> TridiagEigResult:
-    """Selected eigenpairs of tridiag(d, e) at (sorted) indices `ks`."""
+                          key: jax.Array | None = None,
+                          method: str = "batched") -> TridiagEigResult:
+    """Selected eigenpairs of tridiag(d, e) at indices ``ks`` (any order).
+
+    ``ks`` is sorted internally and the result unpermuted, so
+    ``lam[i], Z[:, i]`` answer ``ks[i]`` as given — ``inverse_iteration``'s
+    gap-based clustering and masked MGS assume ascending shifts, and
+    feeding them unsorted eigenvalues silently mis-clusters and skips
+    reorthogonalization (the shuffled-``ks`` regression in
+    tests/test_tridiag_eig.py).
+
+    method:
+      'scan'    — the legacy two-program baseline (bisection jit + inverse
+                  iteration jit, unroll=1 Sturm scans).
+      'batched' — default: ONE fused program from
+                  ``kernels.tridiag_eig.ops`` with unrolled Sturm scans;
+                  bitwise-identical values, measurably faster (the
+                  BENCH_tridiag gate), and the path ``core.batched`` vmaps.
+      'kernel'  — the Pallas kernels (interpret mode off-TPU), for parity
+                  tests and TPU execution.
+    """
     if key is None:
         key = jax.random.PRNGKey(12021)
-    lam = bisect_eigenvalues(d, e, ks)
-    Z = inverse_iteration(d, e, lam, key)
-    return TridiagEigResult(lam=lam, Z=Z)
+    ks = jnp.asarray(ks)
+    order = jnp.argsort(ks)
+    inv = jnp.argsort(order)
+    ks_sorted = ks[order]
+    if method == "scan":
+        lam = bisect_eigenvalues(d, e, ks_sorted)
+        Z = inverse_iteration(d, e, lam, key)
+    elif method == "batched":
+        from repro.kernels.tridiag_eig.ops import tridiag_eig_batched
+        lam, Z = tridiag_eig_batched(d, e, ks_sorted, key)
+    elif method == "kernel":
+        from repro.kernels.tridiag_eig.ops import tridiag_eig_kernel
+        lam, Z = tridiag_eig_kernel(d, e, ks_sorted, key)
+    else:
+        raise ValueError(f"unknown tridiag-eig method: {method!r}")
+    return TridiagEigResult(lam=lam[inv], Z=Z[:, inv])

@@ -25,7 +25,10 @@ TT (``solve_tt_distributed``, the ELPA2-style two-stage path):
        chase on packed O(n w) band storage; the rotation stream is
        recorded, not accumulated — Q1 never leaves the mesh and no
        (n, n) Q2 is formed)
-  TT3  bisection + inverse iteration         (replicated, O(n s))
+  TT3  bisection + inverse iteration         (spectrum-partitioned: each
+       device owns a contiguous slice of the wanted indices — EleMRRR-
+       style — bisects and inverse-iterates it locally, and two kinds of
+       all_gather reassemble lam and Z; see ``dist_tridiag_eig``)
   TT4  Y = Q1 (Q2 Z)                         (rotation replay on the thin
        slab + collective-free panel matmul against the mesh-resident Q1)
   BT1  X = U^{-1} Y                          (dist_trsm_left)
@@ -55,7 +58,11 @@ from repro.core.linalg_utils import symmetrize
 from repro.core.operators import ExplicitC
 from repro.core.sbr import (_jit_house_panel, _jit_pack, _jit_slice_cols,
                             _n_panels, apply_q2, band_chase)
-from repro.core.tridiag_eig import eigh_tridiag_selected
+from repro.core.tridiag_eig import (TridiagEigResult, _cluster_ids,
+                                    _gttrf_gtts2, _mgs_clustered,
+                                    bisect_eigenvalues,
+                                    eigh_tridiag_selected)
+from repro.kernels.tridiag_eig.ops import SCAN_UNROLL
 from .sharded_la import (_n_row_shards, _row_axes, _row_spec, _row_sharded,
                          band_sweep_program, dist_apply_wy_right,
                          dist_apply_wy_two_sided, dist_cholesky,
@@ -401,6 +408,114 @@ def dist_reduce_to_band_stepwise(mesh, C, w: int = 8):
     return W, Q1
 
 
+@functools.lru_cache(maxsize=None)
+def tt3_program(mesh, n: int, s_pad: int, max_iters: int, iters: int,
+                unroll: int, dtype_name: str):
+    """ONE ``shard_map``-ped jitted program for the spectrum-partitioned
+    TT3 (EleMRRR-style, arXiv:1205.2107).
+
+    The wanted-index axis is sharded over EVERY mesh axis: each device
+    bisects its contiguous slice of ``ks`` with the unrolled Sturm scans
+    (lanes are independent, so the partition is embarrassingly parallel),
+    ONE all_gather reassembles the full sorted ``lam`` — which doubles as
+    the broadcast for the replicated gap-based clustering (the
+    ``band_sweep_program`` trick: redundant O(s) work, zero extra
+    collectives) — and each inverse-iteration round factors/solves only
+    the local shifted systems before an all_gather over the column axis
+    rebuilds the block for the replicated cluster-wise MGS. That per-round
+    gather is what keeps cross-shard clusters correct: a degenerate pair
+    split across the slice boundary still reorthogonalizes every round,
+    exactly like the replicated path — ``lam`` is BITWISE equal to
+    ``eigh_tridiag_selected(..., method='batched')`` (each lane's Sturm
+    arithmetic is independent of its neighbors), and ``Z`` agrees to the
+    last bits: the only width-sensitive op is the column-norm reduction,
+    whose vectorization may reassociate on narrow local slices (ulp-level,
+    pinned <= 1e-12 by the parity tests and the bench gate).
+
+    Collectives: 1 (lam) + ``iters`` (Z rounds). Requires ``s_pad``
+    divisible by the device count (``dist_tridiag_eig`` owns the padding).
+
+    Returns a jitted ``(d, e, ks_pad, X0) -> (lam (s_pad,), Z (n, s_pad))``
+    callable; ``ks_pad`` sorted ascending, ``X0`` column-normalized with
+    padding columns exactly zero (they solve to zero and drop out of every
+    MGS sum, so real columns never see them).
+    """
+    axes = tuple(mesh.axis_names)
+    part = axes if len(axes) > 1 else axes[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_dev = 1
+    for a in axes:
+        n_dev *= sizes[a]
+    assert s_pad % n_dev == 0, (s_pad, n_dev)
+    s_loc = s_pad // n_dev
+
+    def local(d, e, ks_loc, X0):
+        lam_loc = bisect_eigenvalues(d, e, ks_loc, max_iters=max_iters,
+                                     unroll=unroll)
+        lam = jax.lax.all_gather(lam_loc, part, axis=0, tiled=True)
+        scale = jnp.maximum(jnp.max(jnp.abs(d)),
+                            jnp.max(jnp.abs(e)) if e.size else 0.0)
+        cid = _cluster_ids(lam, scale)
+        # flat shard index in sharding order -> this device's column offset
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * sizes[a] + jax.lax.axis_index(a)
+        col0 = idx * s_loc
+        solve_batch = jax.vmap(_gttrf_gtts2, in_axes=(None, None, 0, 1),
+                               out_axes=1)
+        tiny = jnp.finfo(X0.dtype).tiny
+
+        def one_round(_, X):
+            X_loc = jax.lax.dynamic_slice_in_dim(X, col0, s_loc, axis=1)
+            X_loc = solve_batch(d, e, lam_loc, X_loc)
+            X_loc = X_loc / jnp.maximum(
+                jnp.linalg.norm(X_loc, axis=0, keepdims=True), tiny)
+            X = jax.lax.all_gather(X_loc, part, axis=1, tiled=True)
+            return _mgs_clustered(X, cid)
+
+        Z = jax.lax.fori_loop(0, iters, one_round, X0)
+        return lam, Z
+
+    prog = shard_map(local, mesh=mesh,
+                     in_specs=(P(None), P(None), P(part), P(None, None)),
+                     out_specs=(P(None), P(None, None)),
+                     check_rep=False)
+    return jax.jit(prog)
+
+
+def dist_tridiag_eig(mesh, d: jax.Array, e: jax.Array, ks: jax.Array,
+                     key: Optional[jax.Array] = None, max_iters: int = 80,
+                     iters: int = 3) -> TridiagEigResult:
+    """Selected eigenpairs of tridiag(d, e) with the spectrum partitioned
+    over the mesh (``tt3_program``); the distributed ``eigh_tridiag_selected``.
+
+    Same contract: ``ks`` in any order, sorted internally and the result
+    unpermuted. ``s`` is padded up to the device-count multiple with
+    duplicates of the top index and zero start columns — both inert, both
+    sliced off — so the index slices always tile the mesh. Eigenvalues
+    are bitwise those of the replicated ``method='batched'`` path and
+    eigenvectors match to the last bits (see ``tt3_program``).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(12021)
+    d, e, ks = jnp.asarray(d), jnp.asarray(e), jnp.asarray(ks)
+    n, s = d.shape[0], ks.shape[0]
+    n_dev = int(mesh.devices.size)
+    s_pad = -(-s // n_dev) * n_dev
+    order = jnp.argsort(ks)
+    inv = jnp.argsort(order)
+    ks_sorted = ks[order]
+    ks_pad = jnp.concatenate(
+        [ks_sorted, jnp.full((s_pad - s,), ks_sorted[-1], ks_sorted.dtype)])
+    X0 = jax.random.normal(key, (n, s), d.dtype)
+    X0 = X0 / jnp.linalg.norm(X0, axis=0, keepdims=True)
+    X0 = jnp.zeros((n, s_pad), d.dtype).at[:, :s].set(X0)
+    prog = tt3_program(mesh, n, s_pad, max_iters, iters, SCAN_UNROLL,
+                       jnp.dtype(d.dtype).name)
+    lam, Z = _dispatch(prog, d, e, ks_pad, X0)
+    return TridiagEigResult(lam=lam[:s][inv], Z=Z[:, :s][:, inv])
+
+
 def solve_tt_distributed(
     mesh,
     A: jax.Array,
@@ -410,15 +525,19 @@ def solve_tt_distributed(
     band_width: int = 8,
     key: Optional[jax.Array] = None,
     return_info: bool = False,
+    shard_tt3: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
     """s extremal eigenpairs of A X = B X Lambda via the distributed
     two-stage reduction (the paper's TT variant, ELPA2-style).
 
     The band reduction (TT1) and every O(n^3)/O(n^2 s) GEMM/TRSM stay on
-    the mesh; the bulge chase (TT2) and the tridiagonal eigensolver (TT3)
-    run replicated — they are the O(n^2 w)/O(n s) stages the paper measures
-    as negligible. Returns ``(evals (s,) ascending, X (n, s))``; with
-    ``return_info=True`` a third dict carries per-stage wall-clock times.
+    the mesh, and the tridiagonal eigensolver (TT3) is spectrum-partitioned
+    over it (``dist_tridiag_eig``: per-device index slices, EleMRRR-style;
+    ``shard_tt3=False`` falls back to the replicated fused path — same
+    values bitwise). Only the bulge chase (TT2) runs replicated — the
+    O(n^2 w) stage the paper measures as negligible. Returns
+    ``(evals (s,) ascending, X (n, s))``; with ``return_info=True`` a third
+    dict carries per-stage wall-clock times.
     """
     n = A.shape[0]
     if key is None:
@@ -441,10 +560,16 @@ def solve_tt_distributed(
     chase = timed("TT2", lambda wr: band_chase(
         _jit_pack(wr, band_width), band_width), W_rep)
 
-    # TT3: selected eigenpairs of the tridiagonal (replicated, O(n s))
+    # TT3: selected eigenpairs of the tridiagonal — each device bisects +
+    # inverse-iterates its contiguous slice of the wanted indices (O(n s / P)
+    # local work, 1 + iters collectives); replicated fallback is bitwise
     ks = jnp.arange(s) if which == "smallest" else jnp.arange(n - s, n)
-    lam, Z = timed("TT3", lambda d, e: eigh_tridiag_selected(d, e, ks, key),
-                   chase.d, chase.e)
+    if shard_tt3:
+        lam, Z = timed("TT3", lambda d, e: dist_tridiag_eig(
+            mesh, d, e, ks, key), chase.d, chase.e)
+    else:
+        lam, Z = timed("TT3", lambda d, e: eigh_tridiag_selected(
+            d, e, ks, key), chase.d, chase.e)
 
     # TT4: Y = Q1 (Q2 Z) — Q2 Z replays the recorded rotations over the
     # replicated (n, s) slab; the product against the row-sharded Q1 is a
@@ -456,6 +581,7 @@ def solve_tt_distributed(
     X = timed("BT1", lambda y: dist_trsm_left(mesh, U, y), Y)
 
     if return_info:
-        info = {"stage_times": times, "band_width": int(band_width)}
+        info = {"stage_times": times, "band_width": int(band_width),
+                "tt3_sharded": bool(shard_tt3)}
         return lam, X, info
     return lam, X

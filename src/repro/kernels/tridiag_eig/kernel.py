@@ -1,0 +1,218 @@
+"""Pallas TPU kernels: batched Sturm bisection + shifted inverse iteration.
+
+TT3's two halves, each as ONE kernel launch over VMEM-resident state:
+
+``bisect_sturm_pallas`` advances ALL wanted indices' intervals together —
+the (lo, hi) interval state is a pair of (1, S) lane vectors carried
+through a ``fori_loop`` of bisection sweeps, and every sweep runs the
+pivmin-clamped Sturm recurrence down the (N, 1) diagonal columns once,
+vectorized across the index lane. The iteration count is static, the
+splits are ``0.5 (lo + hi)``, and the recurrence is the same op sequence
+as ``core.tridiag_eig.sturm_count`` — interpret mode reproduces the
+``bisect_sturm_ref`` oracle bitwise.
+
+``invit_pallas`` factors and solves all S shifted tridiagonal systems per
+sweep in one launch: the DGTTRF partial-pivoting recurrence and the
+forward substitution share a single row loop (carry = current pivot row,
+lane-vectorized over shifts; D/DU/DU2 and the permuted RHS land in VMEM
+scratch), a reversed row loop back-substitutes, and the DSTEIN-style
+cluster-wise MGS runs over the column lanes with iota masks — the
+``house_panel`` trick: no dynamic lane indexing anywhere, each column is
+extracted by a masked reduction.
+
+Padding contract (the ops wrapper enforces it): rows to the sublane
+multiple with ``e = 0`` on the seam (padded rows decouple — their Sturm
+terms are positive and their solve rows carry zeros), lanes to 128 with
+out-of-band cluster ids and zero start vectors, so padded lanes never mix
+into real columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _clamp(q, piv):
+    """Pivmin clamp away from zero, sign-preserving (DSTEBZ / DGTTRF)."""
+    return jnp.where(jnp.abs(q) < piv, jnp.where(q < 0, -piv, piv), q)
+
+
+# ------------------------------------------------------------- bisection --
+
+def _bisect_kernel(d_ref, e2_ref, ks_ref, lo_ref, hi_ref, piv_ref, lam_ref,
+                   *, max_iters: int):
+    N = d_ref.shape[0]
+    ks = ks_ref[...]
+    piv = piv_ref[...]
+
+    def sweep(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+
+        def row(i, qc):
+            q, cnt = qc
+            di = d_ref[pl.ds(i, 1), :]    # (1, 1)
+            ei2 = e2_ref[pl.ds(i, 1), :]  # (1, 1)
+            q_new = (di - mid) - ei2 / _clamp(q, piv)
+            return q_new, cnt + (q_new < 0).astype(jnp.int32)
+
+        q0 = jnp.ones(mid.shape, mid.dtype)
+        c0 = jnp.zeros(mid.shape, jnp.int32)
+        _, cnt = jax.lax.fori_loop(0, N, row, (q0, c0))
+        go_right = cnt <= ks
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, max_iters, sweep, (lo_ref[...], hi_ref[...]))
+    lam_ref[...] = 0.5 * (lo + hi)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def bisect_sturm_pallas(d2, e22, ks2, lo2, hi2, piv2,
+                        max_iters: int = 80, interpret: bool = True):
+    """All-indices Sturm bisection in ONE kernel launch.
+
+    d2/e22: (N, 1) diagonal and squared off-diagonal (e2[0] = 0, padded
+    rows decoupled); ks2: (1, S) int32 wanted indices; lo2/hi2: (1, S)
+    initial Gershgorin intervals; piv2: (1, S) broadcast pivmin.
+    Returns lam (1, S).
+    """
+    N, _ = d2.shape
+    S = ks2.shape[1]
+    return pl.pallas_call(
+        functools.partial(_bisect_kernel, max_iters=max_iters),
+        in_specs=[pl.BlockSpec((N, 1), lambda: (0, 0)),
+                  pl.BlockSpec((N, 1), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((1, S), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, S), d2.dtype),
+        interpret=interpret,
+    )(d2, e22, ks2, lo2, hi2, piv2)
+
+
+# ----------------------------------------------------- inverse iteration --
+
+def _invit_kernel(d_ref, e_ref, lam_ref, cid_ref, piv_ref, x0_ref, z_ref,
+                  dscr, duscr, du2scr, yscr, *, iters: int):
+    N, S = x0_ref.shape
+    dtype = x0_ref.dtype
+    lam = lam_ref[...]
+    cid = cid_ref[...]
+    piv = piv_ref[...]
+    tiny = jnp.finfo(dtype).tiny
+    lanes1 = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+    lanesN = jax.lax.broadcasted_iota(jnp.int32, (N, S), 1)
+
+    z_ref[...] = x0_ref[...]
+
+    def one_round(_, carry):
+        # --- DGTTRF factorization fused with the forward substitution:
+        # one row loop, carry = (current pivot, current superdiag, current
+        # rhs), each lane its own shifted system T - lam_j I.
+        def fact_fwd(i, state):
+            dcur, ducur, bcur = state
+            dl_i = e_ref[pl.ds(i, 1), :]                    # (1, 1)
+            dnext = d_ref[pl.ds(i + 1, 1), :] - lam         # (1, S)
+            dunext = e_ref[pl.ds(i + 1, 1), :]              # (1, 1)
+            b_next = z_ref[pl.ds(i + 1, 1), :]              # (1, S)
+            no_swap = jnp.abs(dcur) >= jnp.abs(dl_i)
+            fact_ns = dl_i / _clamp(dcur, piv)
+            fact_sw = dcur / _clamp(dl_i, piv)
+            dscr[pl.ds(i, 1), :] = jnp.where(no_swap, dcur, dl_i)
+            duscr[pl.ds(i, 1), :] = jnp.where(no_swap, ducur, dnext)
+            du2scr[pl.ds(i, 1), :] = jnp.where(no_swap, 0.0, dunext)
+            L_i = jnp.where(no_swap, fact_ns, fact_sw)
+            dcur_new = jnp.where(no_swap, dnext - fact_ns * ducur,
+                                 ducur - fact_sw * dnext)
+            ducur_new = jnp.where(no_swap, dunext, -fact_sw * dunext)
+            yscr[pl.ds(i, 1), :] = jnp.where(no_swap, bcur, b_next)
+            bcur_new = jnp.where(no_swap, b_next - L_i * bcur,
+                                 bcur - L_i * b_next)
+            return dcur_new, ducur_new, bcur_new
+
+        d0 = d_ref[pl.ds(0, 1), :] - lam
+        du0 = jnp.broadcast_to(e_ref[pl.ds(0, 1), :], (1, S)).astype(dtype)
+        b0 = z_ref[pl.ds(0, 1), :]
+        d_last, _, b_last = jax.lax.fori_loop(0, N - 1, fact_fwd,
+                                              (d0, du0, b0))
+        dscr[pl.ds(N - 1, 1), :] = d_last
+        duscr[pl.ds(N - 1, 1), :] = jnp.zeros((1, S), dtype)
+        du2scr[pl.ds(N - 1, 1), :] = jnp.zeros((1, S), dtype)
+        yscr[pl.ds(N - 1, 1), :] = b_last
+
+        # --- back substitution, reversed row loop
+        def back(j, x12):
+            x1, x2 = x12
+            i = N - 1 - j
+            y_i = yscr[pl.ds(i, 1), :]
+            du_i = duscr[pl.ds(i, 1), :]
+            du2_i = du2scr[pl.ds(i, 1), :]
+            ds_i = _clamp(dscr[pl.ds(i, 1), :], piv)
+            x_i = (y_i - du_i * x1 - du2_i * x2) / ds_i
+            z_ref[pl.ds(i, 1), :] = x_i
+            return x_i, x1
+
+        zero = jnp.zeros((1, S), dtype)
+        jax.lax.fori_loop(0, N, back, (zero, zero))
+
+        # --- column normalization + cluster-wise MGS over the lanes.
+        # Norms are max-abs rescaled: a solve at a converged shift returns
+        # columns at the 1/pivmin scale (~1e292 in f64), whose naive
+        # sum-of-squares overflows — jnp.linalg.norm rescales too.
+        X = z_ref[...]
+        m = jnp.maximum(jnp.max(jnp.abs(X), axis=0, keepdims=True), tiny)
+        Xs = X / m
+        norms = m * jnp.sqrt(jnp.sum(Xs * Xs, axis=0, keepdims=True))
+        X = X / jnp.maximum(norms, tiny)
+
+        def mgs(i, X):
+            ci = jnp.sum(jnp.where(lanes1 == i, cid, 0))
+            mask = ((lanes1 < i) & (cid == ci)).astype(dtype)
+            xi = jnp.sum(jnp.where(lanesN == i, X, 0.0), axis=1,
+                         keepdims=True)                       # (N, 1)
+            coeff = jnp.sum(X * xi, axis=0, keepdims=True) * mask
+            xi = xi - jnp.sum(X * coeff, axis=1, keepdims=True)
+            mi = jnp.maximum(jnp.max(jnp.abs(xi)), tiny)
+            nrm = mi * jnp.sqrt(jnp.sum((xi / mi) * (xi / mi)))
+            xi = xi / jnp.maximum(nrm, tiny)
+            return jnp.where(lanesN == i, xi, X)
+
+        X = jax.lax.fori_loop(1, S, mgs, X)
+        z_ref[...] = X
+        return carry
+
+    jax.lax.fori_loop(0, iters, one_round, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def invit_pallas(d2, e2, lam2, cid2, piv2, X0,
+                 iters: int = 3, interpret: bool = True):
+    """All-shifts inverse iteration in ONE kernel launch.
+
+    d2: (N, 1) diagonal; e2: (N, 1) off-diagonal padded with zeros (e2[i]
+    couples rows i and i+1); lam2: (1, S) SORTED shifts; cid2: (1, S)
+    int32 cluster ids (padded lanes unique); piv2: (1, S) broadcast
+    pivmin; X0: (N, S) column-normalized start block (padded rows/lanes
+    zero). Returns Z (N, S).
+    """
+    N, S = X0.shape
+    dtype = X0.dtype
+    return pl.pallas_call(
+        functools.partial(_invit_kernel, iters=iters),
+        in_specs=[pl.BlockSpec((N, 1), lambda: (0, 0)),
+                  pl.BlockSpec((N, 1), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0)),
+                  pl.BlockSpec((1, S), lambda: (0, 0)),
+                  pl.BlockSpec((N, S), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((N, S), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, S), dtype),
+        scratch_shapes=[pltpu.VMEM((N, S), dtype) for _ in range(4)],
+        interpret=interpret,
+    )(d2, e2, lam2, cid2, piv2, X0)

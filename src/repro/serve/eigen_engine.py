@@ -160,8 +160,15 @@ class EigenEngine:
             req.info = {"path": "batched", "bucket": list(bkey),
                         "batch": len(reqs), "variant": variant,
                         "converged": bool(conv[i]),
+                        "cache_hit": res.info["cache_hit"],
+                        "compile_s": res.info["compile_s"],
                         "dispatch_wall_s": res.info["wall_s"],
                         "latency_s": req.finished_at - req.submitted_at}
+            if not conv[i]:
+                req.info["warnings"] = [
+                    f"{variant}: pencil retired at the restart budget "
+                    f"(max_restarts={self.max_restarts}) without "
+                    f"converging; residuals may exceed tolerance"]
             self.done.append(req)
 
     def _dispatch_direct(self, req: EigenRequest) -> None:
@@ -183,6 +190,8 @@ class EigenEngine:
                     "latency_s": req.finished_at - req.submitted_at}
         if "router" in res.info:
             req.info["router"] = res.info["router"]
+        if "warnings" in res.info:
+            req.info["warnings"] = res.info["warnings"]
         self.done.append(req)
 
     # --------------------------------------------------------------- tick --

@@ -117,3 +117,51 @@ def test_engine_oversized_goes_through_router():
     np.testing.assert_allclose(done[uid_big].evals,
                                np.asarray(big.exact_evals[:S]),
                                rtol=1e-7, atol=1e-9)
+
+
+def test_solve_batched_cold_warm_cache_hit():
+    """Cold call: cache_hit=False, compile time reported SEPARATELY from
+    the execution wall (the old wall_s swallowed XLA compilation, so
+    cold-bucket pencils_per_s was wildly wrong). Warm call: cache_hit=True."""
+    from repro.core.batched import clear_pipeline_cache
+    clear_pipeline_cache()
+    probs = _pencils(md_like, N, BATCH, seed=300)
+    A, B = _stack(probs)
+    r1 = solve_batched(A, B, S, variant="TD")
+    assert r1.info["cache_hit"] is False
+    assert r1.info["compile_s"] > 0.0
+    # execution-only wall: the cold call's wall_s must not include the
+    # compile (compilation of the vmapped pipeline dwarfs one n=32 batch)
+    assert r1.info["wall_s"] < r1.info["compile_s"]
+    r2 = solve_batched(A, B, S, variant="TD")
+    assert r2.info["cache_hit"] is True
+    assert r2.info["compile_s"] == 0.0
+    np.testing.assert_allclose(np.asarray(r1.evals), np.asarray(r2.evals))
+
+
+def test_solve_batched_surfaces_unconverged():
+    """A tiny restart budget must be reported, not dropped on the floor."""
+    probs = _pencils(md_like, N, BATCH, seed=400)
+    A, B = _stack(probs)
+    res = solve_batched(A, B, S, variant="KE", max_restarts=1)
+    n_unconv = res.info["n_unconverged"]
+    assert n_unconv == int(np.sum(~np.asarray(res.converged)))
+    assert n_unconv > 0
+    assert any("restart budget" in w for w in res.info["warnings"])
+    # and a healthy budget reports zero without warnings
+    ok = solve_batched(A, B, S, variant="KE", invert=True, max_restarts=300)
+    assert ok.info["n_unconverged"] == 0 and "warnings" not in ok.info
+
+
+def test_engine_surfaces_unconverged_and_cache_metadata():
+    probs = _pencils(md_like, N, 2, seed=500)
+    eng = EigenEngine(slots=2, bucket_shapes=[N], variant="KE",
+                      max_restarts=1)
+    for p in probs:
+        eng.submit(p.A, p.B, S)
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    for req in done:
+        assert "cache_hit" in req.info and "compile_s" in req.info
+        assert not req.info["converged"]
+        assert any("restart budget" in w for w in req.info["warnings"])
