@@ -1,0 +1,46 @@
+"""Static program auditor: budget contracts for every solver path.
+
+Lower (never run) each solver program, walk its jaxpr/StableHLO into a
+:class:`~repro.analysis.static_audit.profile.ProgramProfile`, and enforce
+the declarative budget contracts of :mod:`contracts` — the single source
+of truth for the repo's published invariants (TT1 fused sweep <= 3
+dispatches, KE <= 2 collectives per block step, dist TT3 exactly
+``1 + iters`` collectives, ...). ``launch/audit.py`` is the CLI;
+``assert_program_budget`` (tests/conftest.py) is the pytest fixture.
+"""
+from .contracts import (AuditSpec, KE_COLLECTIVES_PER_BLOCK_STEP,
+                        KE_HLO_ALL_GATHER_MAX, KE_HLO_ALL_REDUCE_MAX,
+                        TT1_COLLECTIVES_PER_PANEL,
+                        TT1_FUSED_MAX_DISPATCHES,
+                        TT1_STEPWISE_DISPATCHES_PER_PANEL,
+                        TT3_HLO_ALL_GATHER_MAX, ke_dispatch_budget,
+                        lanczos_block_dispatch_budget,
+                        lanczos_single_dispatch_budget, make_mesh_2dev,
+                        register_all, tt3_dist_collectives)
+from .crosscheck import CrossCheck, all_ok, crosscheck_stagecosts
+from .dtype_lint import find_precision_leaks, lint_reports
+from .pallas_lint import (LintFinding, errors, lint_pallas_profiles,
+                          lint_signature_parity)
+from .profile import (CollectiveSite, LoopInfo, PallasCallInfo,
+                      ProgramProfile, hlo_counts, profile_fn, profile_jaxpr)
+from .registry import (AuditEntry, BudgetContract, EntryReport, ProgramSpec,
+                       check_all, check_entry, clear_registry, entries,
+                       get_entry, register)
+
+__all__ = [
+    "AuditSpec", "register_all", "make_mesh_2dev",
+    "ProgramProfile", "CollectiveSite", "LoopInfo", "PallasCallInfo",
+    "profile_fn", "profile_jaxpr", "hlo_counts",
+    "AuditEntry", "BudgetContract", "EntryReport", "ProgramSpec",
+    "register", "get_entry", "entries", "clear_registry", "check_entry",
+    "check_all",
+    "CrossCheck", "crosscheck_stagecosts", "all_ok",
+    "LintFinding", "lint_pallas_profiles", "lint_signature_parity", "errors",
+    "find_precision_leaks", "lint_reports",
+    "TT1_FUSED_MAX_DISPATCHES", "TT1_COLLECTIVES_PER_PANEL",
+    "TT1_STEPWISE_DISPATCHES_PER_PANEL", "KE_COLLECTIVES_PER_BLOCK_STEP",
+    "KE_HLO_ALL_REDUCE_MAX", "KE_HLO_ALL_GATHER_MAX",
+    "TT3_HLO_ALL_GATHER_MAX", "ke_dispatch_budget",
+    "lanczos_block_dispatch_budget", "lanczos_single_dispatch_budget",
+    "tt3_dist_collectives",
+]

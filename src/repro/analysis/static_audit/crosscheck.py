@@ -1,0 +1,145 @@
+"""Cost-model cross-check: StageCost fields vs statically counted reality.
+
+``analysis.variant_model`` prices each stage as ``(flops, bytes,
+collective_bytes, dispatches, collectives, loop_steps)`` and the router
+trusts those numbers. This module closes the loop *at lint time*: for
+every stage with a registered audit entry it compares the model's
+``dispatches`` / ``collectives`` / ``loop_steps`` against the values the
+:mod:`profile` walker counts in the lowered program, so router drift
+(model says 2 collectives per panel, program does 3) is caught by
+``launch/audit.py`` instead of by a benchmark regression weeks later.
+
+Relations are *exact* wherever the implementation is exactly countable
+(collectives per block step, dispatch structure, the TT2/TT4 fori-ladder
+trip counts) and tolerance-based where the model is a smooth formula over
+a discrete schedule (total panel count ``3 n/w`` vs ``3 n_panels``; the
+TT3 trip count, where the model omits the outer fori wrappers and the
+O(1) setup scans the walker also sees).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.analysis import variant_model as vm
+
+from .contracts import AuditSpec, KE_COLLECTIVES_PER_BLOCK_STEP, \
+    TT1_COLLECTIVES_PER_PANEL
+from .registry import EntryReport
+
+
+@dataclasses.dataclass
+class CrossCheck:
+    stage: str
+    field: str
+    model_value: float
+    counted_value: float
+    relation: str          # "exact" | "rel<=tol"
+    tol: float
+    ok: bool
+    note: str = ""
+
+    def as_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _exact(stage, field, model, counted, note="") -> CrossCheck:
+    return CrossCheck(stage, field, float(model), float(counted), "exact",
+                      0.0, float(model) == float(counted), note)
+
+
+def _rel(stage, field, model, counted, tol, note="") -> CrossCheck:
+    denom = max(abs(float(counted)), 1.0)
+    err = abs(float(model) - float(counted)) / denom
+    return CrossCheck(stage, field, float(model), float(counted),
+                      f"rel<={tol}", tol, err <= tol, note)
+
+
+def crosscheck_stagecosts(reports: Dict[str, EntryReport],
+                          spec: Optional[AuditSpec] = None
+                          ) -> List[CrossCheck]:
+    """Compare StageCost fields to the statically counted program shape.
+
+    ``reports`` is ``{entry_name: EntryReport}`` from ``registry.check_all``
+    (mesh entries may be absent on a single device — their checks are
+    simply omitted)."""
+    spec = spec or AuditSpec()
+    n, s, w, p, m = spec.n, spec.s, spec.w, spec.p, spec.m
+    tt = vm.stage_costs("TT", n, s, band_width=w)
+    checks: List[CrossCheck] = []
+
+    # ---- TT1: the fused panel sweep (distributed entry) ------------------
+    r = reports.get("dist/band_sweep_program")
+    if r is not None and not r.skipped:
+        checks.append(_exact(
+            "TT1", "dispatches", tt["TT1"].dispatches, r.dispatches,
+            "sweep program + band repack"))
+        model_per_panel = tt["TT1"].collectives / (n / max(w, 1))
+        checks.append(_exact(
+            "TT1", "collectives_per_panel", model_per_panel,
+            r.max_collectives_per_step,
+            f"gather+psum+gather = {TT1_COLLECTIVES_PER_PANEL}"))
+        checks.append(_rel(
+            "TT1", "collectives", tt["TT1"].collectives,
+            r.total_collectives, 0.35,
+            "model 3 n/w vs counted 3 n_panels (discrete panel schedule)"))
+
+    # ---- TT2: the wavefront bulge chase ----------------------------------
+    r = reports.get("core/band_chase")
+    if r is not None and not r.skipped:
+        counted_steps = sum(p_.loop_steps_static for p_ in r.profiles)
+        checks.append(_exact(
+            "TT2", "dispatches", tt["TT2"].dispatches, r.dispatches))
+        checks.append(_exact(
+            "TT2", "loop_steps", tt["TT2"].loop_steps, counted_steps,
+            "_chase_loop_steps mirrors the pass schedule exactly"))
+
+    # ---- TT3: fused bisection + inverse iteration ------------------------
+    r = reports.get("core/tridiag_eig_batched")
+    if r is not None and not r.skipped:
+        counted_steps = sum(p_.loop_steps_static for p_ in r.profiles)
+        checks.append(_exact(
+            "TT3", "dispatches", tt["TT3"].dispatches, r.dispatches))
+        checks.append(_rel(
+            "TT3", "loop_steps", tt["TT3"].loop_steps, counted_steps, 0.15,
+            "model omits outer fori wrappers and O(1) setup scans"))
+
+    # ---- TT4: rotation replay --------------------------------------------
+    r = reports.get("core/apply_q2")
+    if r is not None and not r.skipped:
+        counted_steps = sum(p_.loop_steps_static for p_ in r.profiles)
+        checks.append(_exact(
+            "TT4", "loop_steps", tt["TT4"].loop_steps, counted_steps,
+            "_replay_loop_steps mirrors the replay schedule exactly"))
+
+    # ---- KE: communication-avoiding block Lanczos ------------------------
+    r = reports.get("dist/ke_restart_program")
+    if r is not None and not r.skipped:
+        n_iter = vm.estimate_lanczos_iters(n, s, m, p=p)
+        ke = vm.stage_costs("KE", n, s, m=m, p=p, n_iter=n_iter)["KE_iter"]
+        n_restart = vm.estimate_lanczos_restarts(n_iter, s, m, p)
+        n_block_steps = -(-n_iter // p)
+        checks.append(_exact(
+            "KE", "dispatches_per_restart", 1, r.dispatches,
+            "ONE fused program per thick restart"))
+        checks.append(_exact(
+            "KE", "dispatches", ke.dispatches, n_restart + 2,
+            "model restart+2 == registry restart x 1 + prep + extraction"))
+        checks.append(_exact(
+            "KE", "collectives_per_block_step",
+            ke.collectives / n_block_steps, r.max_collectives_per_step,
+            f"psum + all_gather = {KE_COLLECTIVES_PER_BLOCK_STEP}"))
+        checks.append(_exact(
+            "KE", "collectives_per_restart_segment",
+            KE_COLLECTIVES_PER_BLOCK_STEP * (m // p), r.total_collectives,
+            "2 collectives x (m/p) block steps in the fused segment"))
+
+    return checks
+
+
+def all_ok(checks: List[CrossCheck]) -> bool:
+    return all(c.ok for c in checks)
+
+
+__all__ = ["CrossCheck", "crosscheck_stagecosts", "all_ok"]

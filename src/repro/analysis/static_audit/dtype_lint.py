@@ -1,0 +1,54 @@
+"""Dtype policy lint: precision leaks and recompile hazards.
+
+Two failure modes the fp64 pipelines must never pick up silently:
+
+* **precision leaks** — a ``convert_element_type`` demoting float64 to
+  float32/bf16/fp16 anywhere in a solver program (a Python ``float32``
+  literal, an fp32 intermediate from a library helper). The walker
+  records every conversion with its static count; ``find_precision_leaks``
+  surfaces the demotions. Each registered contract also forbids them
+  (``forbid_f64_downcasts``), so the CLI fails on one.
+* **recompile hazards** — weak-typed inputs to a cached program: a
+  Python scalar passed where an array is expected traces a *different*
+  program than a committed-dtype array of the same value, so alternating
+  call styles silently double-compiles a bucket. The profile counts
+  weak-typed inputs; entries meant to be served from a shape-bucket cache
+  should show zero. (The dynamic side of this — same bucket shape must
+  hit the jit cache — is pinned by ``tests/test_static_audit.py``.)
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .profile import ProgramProfile
+from .registry import EntryReport
+
+
+def find_precision_leaks(profile: ProgramProfile) -> List[str]:
+    """Human-readable leak descriptions for one profiled program."""
+    return [f"{profile.name}: {conv} x{count}"
+            for conv, count in sorted(profile.f64_downcasts().items())]
+
+
+def lint_reports(reports: Dict[str, EntryReport]) -> dict:
+    """Aggregate dtype findings across entries for AUDIT.json."""
+    leaks: List[str] = []
+    weak: Dict[str, int] = {}
+    converts: Dict[str, int] = {}
+    for name, rep in reports.items():
+        if rep.skipped:
+            continue
+        for prof in rep.profiles:
+            leaks.extend(f"{name}/{leak}"
+                         for leak in find_precision_leaks(prof))
+            if prof.weak_type_inputs:
+                weak[f"{name}/{prof.name}"] = prof.weak_type_inputs
+            for conv, count in prof.converts.items():
+                converts[conv] = converts.get(conv, 0) + count
+    return {"precision_leaks": leaks,
+            "weak_type_inputs": weak,
+            "convert_counts": converts,
+            "ok": not leaks}
+
+
+__all__ = ["find_precision_leaks", "lint_reports"]

@@ -1,0 +1,176 @@
+"""Pallas kernel lint: BlockSpec tiling, VMEM footprint, signature parity.
+
+Three static checks over every ``kernels/*`` subpackage, none of which
+execute a kernel:
+
+* **tile multiples** — TPU fp32 tiling is (8, 128) sublane x lane (see
+  the accelerator guide); a block whose sublane dim exceeds 8 without
+  being a multiple of 8, or whose lane dim exceeds 128 without being a
+  multiple of 128, forces Mosaic into strided relayouts. Sub-tile blocks
+  (lane < 128) are *warnings*, not errors: the wrappers deliberately
+  clamp tiles for small operands and Mosaic pads them — fine for the
+  audit spec's toy shapes, worth seeing in AUDIT.json.
+* **VMEM footprint** — double-buffered residency of all blocks must fit
+  the ~16 MiB/core budget (blocks x itemsize x 2).
+* **ref-vs-kernel signature parity** — every public wrapper ``X`` with a
+  reference ``X_ref`` must accept the ref's required array arguments as
+  its leading parameters (wrapper-only tuning knobs — ``bm``, ``block``,
+  ``force_interpret`` — must come after, with defaults), so tests and
+  callers can swap implementations without shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import inspect
+import pkgutil
+from typing import Dict, List, Optional
+
+from .registry import EntryReport
+
+SUBLANE = 8
+LANE = 128
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # ~16 MiB/core
+DTYPE_BYTES = 8                        # fp64 pipelines (worst case)
+
+#: wrapper -> ref pairs that don't follow the ``X`` / ``X_ref`` convention
+_REF_ALIASES = {"invit_batched": "invit_ref",
+                "tridiag_eig_batched": None,   # composite: no single ref
+                "symm_block": "symm_block_ref"}
+
+
+@dataclasses.dataclass
+class LintFinding:
+    kernel: str
+    check: str       # "tile" | "vmem" | "signature"
+    severity: str    # "error" | "warn"
+    detail: str
+
+    def as_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _lint_block_shape(kernel: str, shape) -> List[LintFinding]:
+    out: List[LintFinding] = []
+    if not shape:
+        return out
+    lane = shape[-1]
+    if lane > LANE and lane % LANE:
+        out.append(LintFinding(kernel, "tile", "error",
+                               f"lane dim {lane} > {LANE} and not a "
+                               f"multiple of {LANE} (block {shape})"))
+    elif lane < LANE and lane % SUBLANE:
+        out.append(LintFinding(kernel, "tile", "warn",
+                               f"lane dim {lane} not {SUBLANE}-aligned "
+                               f"(block {shape}; Mosaic pads)"))
+    elif lane < LANE:
+        out.append(LintFinding(kernel, "tile", "warn",
+                               f"sub-lane-width tile {lane} < {LANE} "
+                               f"(block {shape}; padded, fine for small "
+                               "operands)"))
+    if len(shape) >= 2:
+        sub = shape[-2]
+        if sub > SUBLANE and sub % SUBLANE:
+            out.append(LintFinding(kernel, "tile", "error",
+                                   f"sublane dim {sub} > {SUBLANE} and not "
+                                   f"a multiple of {SUBLANE} "
+                                   f"(block {shape})"))
+    return out
+
+
+def lint_pallas_profiles(reports: Dict[str, EntryReport]
+                         ) -> List[LintFinding]:
+    """Tile + VMEM lint over every pallas_call the profiled entries launch."""
+    findings: List[LintFinding] = []
+    seen = set()
+    for name, rep in reports.items():
+        if rep.skipped:
+            continue
+        for prof in rep.profiles:
+            for pc in prof.pallas_calls:
+                for shape in pc.block_shapes:
+                    for f in _lint_block_shape(name, shape):
+                        key = (f.kernel, f.check, f.severity, f.detail)
+                        if key not in seen:
+                            seen.add(key)
+                            findings.append(f)
+                vmem = sum(_prod(s) for s in pc.block_shapes) \
+                    * DTYPE_BYTES * 2
+                if vmem > VMEM_BUDGET_BYTES:
+                    findings.append(LintFinding(
+                        name, "vmem", "error",
+                        f"double-buffered block residency ~{vmem} B "
+                        f"exceeds {VMEM_BUDGET_BYTES} B "
+                        f"(blocks {pc.block_shapes})"))
+    return findings
+
+
+def _prod(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out
+
+
+def _required_params(fn) -> List[str]:
+    sig = inspect.signature(fn)
+    return [p.name for p in sig.parameters.values()
+            if p.default is inspect.Parameter.empty
+            and p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+
+
+def _all_params(fn) -> List[str]:
+    return list(inspect.signature(fn).parameters)
+
+
+def lint_signature_parity(package: str = "repro.kernels"
+                          ) -> List[LintFinding]:
+    """Wrapper-vs-ref parity across every ``kernels/*`` ops module."""
+    findings: List[LintFinding] = []
+    pkg = importlib.import_module(package)
+    for info in pkgutil.iter_modules(pkg.__path__):
+        if not info.ispkg:
+            continue
+        try:
+            ops = importlib.import_module(f"{package}.{info.name}.ops")
+        except ImportError as exc:
+            findings.append(LintFinding(info.name, "signature", "error",
+                                        f"ops module failed to import: "
+                                        f"{exc}"))
+            continue
+        pairs = 0
+        for attr in getattr(ops, "__all__", dir(ops)):
+            fn = getattr(ops, attr, None)
+            if not callable(fn) or attr.endswith("_ref"):
+                continue
+            ref_name = _REF_ALIASES.get(attr, f"{attr}_ref")
+            if ref_name is None:
+                continue
+            ref = getattr(ops, ref_name, None)
+            if ref is None:
+                continue
+            pairs += 1
+            try:
+                req = _required_params(ref)
+                wrapper_params = _all_params(fn)
+            except (TypeError, ValueError):
+                continue
+            head = wrapper_params[:len(req)]
+            if head != req:
+                findings.append(LintFinding(
+                    info.name, "signature", "error",
+                    f"{attr}({', '.join(wrapper_params)}) does not lead "
+                    f"with {ref_name}'s required args ({', '.join(req)})"))
+        if pairs == 0:
+            findings.append(LintFinding(
+                info.name, "signature", "warn",
+                "no wrapper/ref pair found to compare"))
+    return findings
+
+
+def errors(findings: List[LintFinding]) -> List[LintFinding]:
+    return [f for f in findings if f.severity == "error"]
+
+
+__all__ = ["LintFinding", "lint_pallas_profiles", "lint_signature_parity",
+           "errors", "SUBLANE", "LANE", "VMEM_BUDGET_BYTES"]

@@ -1,0 +1,215 @@
+"""Declarative budget registry: one contract per solver entry point.
+
+Each entry names the jitted program(s) a solver path dispatches, with the
+host multiplicity of each (a thick-restart driver dispatches its restart
+program ``n_restart`` times), and the :class:`BudgetContract` those
+programs must satisfy *statically*. ``check_entry`` lowers every program
+(never runs it), profiles it, and returns an :class:`EntryReport` whose
+``violations`` list is empty iff the contract holds.
+
+This is the single source of truth the scattered PR-5/6/7 test assertions
+collapse into: tests now import the entry names / budget constants from
+``contracts`` and call :func:`check_entry` (or the ``assert_program_budget``
+pytest fixture) instead of re-deriving dispatch counts and grepping HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .profile import ProgramProfile, profile_fn
+
+#: dtypes every fp64 solver program may mention (loop counters, Sturm
+#: index lanes, RNG keys and branch predicates ride along with the f64 data)
+DEFAULT_ALLOWED_DTYPES: Tuple[str, ...] = (
+    "float64", "int64", "int32", "uint32", "uint64", "bool", "key<fry>",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """One jitted program of an entry: how to lower it, never run it."""
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: host dispatches this program contributes per solve/sweep (an int,
+    #: already multiplied out — e.g. the KE restart program at n_restart=3
+    #: contributes 3)
+    host_multiplicity: int = 1
+    with_hlo: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetContract:
+    """The static shape an entry's lowered programs must have."""
+    #: total host->device dispatches per solve (sum of host multiplicities)
+    max_dispatches: Optional[int] = None
+    #: collectives a single trip of the busiest loop may execute
+    #: ("per panel" / "per block step")
+    max_collectives_per_step: Optional[int] = None
+    #: exact static collective total across all programs (loop-multiplied)
+    exact_collectives: Optional[int] = None
+    #: upper bound when an exact count is not pinned
+    max_collectives: Optional[int] = None
+    #: dynamic (traced-bound) while loops allowed across all programs
+    max_dynamic_whiles: Optional[int] = None
+    allowed_dtypes: Tuple[str, ...] = DEFAULT_ALLOWED_DTYPES
+    #: forbid float64 -> float32/bf16/fp16 convert_element_type sites
+    forbid_f64_downcasts: bool = True
+    forbid_callbacks: bool = True
+    #: require at least this many pallas_call launches (kernel entries)
+    min_pallas_calls: int = 0
+    notes: str = ""
+
+    def as_json_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["allowed_dtypes"] = list(self.allowed_dtypes)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditEntry:
+    name: str
+    #: lazily builds the ProgramSpecs (tracing imports jax-heavy modules)
+    build: Callable[[], Sequence[ProgramSpec]]
+    contract: BudgetContract
+    needs_mesh: bool = False
+    tags: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class EntryReport:
+    name: str
+    contract: BudgetContract
+    profiles: List[ProgramProfile]
+    dispatches: int
+    total_collectives: int
+    max_collectives_per_step: int
+    violations: List[str]
+    skipped: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def as_json_dict(self) -> dict:
+        return {"name": self.name, "ok": self.ok, "skipped": self.skipped,
+                "violations": self.violations,
+                "dispatches": self.dispatches,
+                "total_collectives": self.total_collectives,
+                "max_collectives_per_step": self.max_collectives_per_step,
+                "contract": self.contract.as_json_dict(),
+                "programs": [p.as_json_dict() for p in self.profiles]}
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, AuditEntry] = {}
+
+
+def register(entry: AuditEntry) -> AuditEntry:
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_entry(name: str) -> AuditEntry:
+    return _REGISTRY[name]
+
+
+def entries(tags: Optional[Sequence[str]] = None) -> List[AuditEntry]:
+    out = list(_REGISTRY.values())
+    if tags:
+        want = set(tags)
+        out = [e for e in out if want & set(e.tags)]
+    return out
+
+
+def clear_registry() -> None:
+    _REGISTRY.clear()
+
+
+# --------------------------------------------------------------------------
+# contract checking
+# --------------------------------------------------------------------------
+
+def _check_contract(c: BudgetContract, profiles: List[ProgramProfile],
+                    specs: Sequence[ProgramSpec]) -> Tuple[int, int, int,
+                                                           List[str]]:
+    viol: List[str] = []
+    dispatches = sum(s.host_multiplicity for s in specs)
+    total_coll = sum(p.total_collectives() * s.host_multiplicity
+                     for p, s in zip(profiles, specs))
+    per_step = max((p.max_collectives_per_loop_trip() for p in profiles),
+                   default=0)
+    if c.max_dispatches is not None and dispatches > c.max_dispatches:
+        viol.append(f"dispatches {dispatches} > budget {c.max_dispatches}")
+    if (c.max_collectives_per_step is not None
+            and per_step > c.max_collectives_per_step):
+        viol.append(f"collectives per loop step {per_step} > budget "
+                    f"{c.max_collectives_per_step}")
+    if (c.exact_collectives is not None
+            and total_coll != c.exact_collectives):
+        viol.append(f"static collective total {total_coll} != pinned "
+                    f"{c.exact_collectives}")
+    if c.max_collectives is not None and total_coll > c.max_collectives:
+        viol.append(f"static collective total {total_coll} > budget "
+                    f"{c.max_collectives}")
+    whiles = sum(p.dynamic_whiles for p in profiles)
+    if c.max_dynamic_whiles is not None and whiles > c.max_dynamic_whiles:
+        viol.append(f"dynamic while loops {whiles} > budget "
+                    f"{c.max_dynamic_whiles}")
+    if c.forbid_callbacks:
+        cbs = sum(p.callbacks for p in profiles)
+        if cbs:
+            viol.append(f"{cbs} host callback(s) in a no-callback program")
+    if c.forbid_f64_downcasts:
+        for p in profiles:
+            leaks = p.f64_downcasts()
+            if leaks:
+                viol.append(f"{p.name}: precision leak(s) {leaks}")
+    if c.allowed_dtypes:
+        allowed = set(c.allowed_dtypes)
+        for p in profiles:
+            bad = [d for d in p.dtypes_seen() if d not in allowed]
+            if bad:
+                viol.append(f"{p.name}: dtypes {bad} outside allowed set")
+    n_pallas = sum(len(p.pallas_calls) for p in profiles)
+    if n_pallas < c.min_pallas_calls:
+        viol.append(f"{n_pallas} pallas_call(s) < required "
+                    f"{c.min_pallas_calls}")
+    return dispatches, total_coll, per_step, viol
+
+
+def check_entry(entry: AuditEntry) -> EntryReport:
+    """Lower + profile every program of ``entry`` and enforce its contract."""
+    specs = list(entry.build())
+    profiles = [profile_fn(s.fn, *s.args, name=s.name,
+                           with_hlo=s.with_hlo, **s.kwargs) for s in specs]
+    dispatches, total, per_step, viol = _check_contract(
+        entry.contract, profiles, specs)
+    return EntryReport(name=entry.name, contract=entry.contract,
+                       profiles=profiles, dispatches=dispatches,
+                       total_collectives=total,
+                       max_collectives_per_step=per_step, violations=viol)
+
+
+def check_all(tags: Optional[Sequence[str]] = None,
+              have_mesh: bool = True) -> List[EntryReport]:
+    reports = []
+    for e in entries(tags):
+        if e.needs_mesh and not have_mesh:
+            reports.append(EntryReport(
+                name=e.name, contract=e.contract, profiles=[],
+                dispatches=0, total_collectives=0,
+                max_collectives_per_step=0, violations=[], skipped=True))
+            continue
+        reports.append(check_entry(e))
+    return reports
+
+
+__all__ = ["ProgramSpec", "BudgetContract", "AuditEntry", "EntryReport",
+           "register", "get_entry", "entries", "clear_registry",
+           "check_entry", "check_all", "DEFAULT_ALLOWED_DTYPES"]

@@ -390,10 +390,15 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
         # n/w passes — the 1/w factor is what makes TT compute-bound).
         # The whole sweep is ONE fused program + the band repack: 2
         # dispatches, NOT n/w (see core.sbr.reduce_to_band /
-        # dist.sharded_la.band_sweep_program).
+        # dist.sharded_la.band_sweep_program). Each panel iteration of the
+        # distributed sweep issues exactly 3 collectives — all_gather of
+        # the panel (doubling as its broadcast), psum of the (w, w)
+        # coupling, all_gather of the Z panel — a count the static auditor
+        # cross-checks against the lowered program (the old 2/panel here
+        # was model drift, caught by exactly that check).
         costs["TT1"] = StageCost(4 * n3 / 3.0 + 2 * n3,
                                  (n3 / max(w, 1)) * b, coll_panel, 2,
-                                 2.0 * n / max(w, 1))
+                                 3.0 * n / max(w, 1))
         # TT2: wavefront bulge chasing over packed (w+1, n) band storage —
         # O(n^2 w) flops touching only the O(n w) band. The rotation stream
         # is recorded, NOT accumulated into an (n, n) Q2 (that would cost

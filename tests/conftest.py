@@ -1,4 +1,10 @@
+import json
+import os
+import subprocess
+import sys
+
 import jax
+import pytest
 
 # The eigensolver core targets LAPACK-grade accuracy (paper Tables 3/7 are
 # ~1e-15): run the numeric tests in float64. Model smoke tests request their
@@ -7,3 +13,46 @@ import jax
 # exclusive to launch/dryrun.py (see system design); multi-device tests spawn
 # subprocesses with their own XLA_FLAGS.
 jax.config.update("jax_enable_x64", True)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def audit_report():
+    """The static program audit, run ONCE per session in a subprocess.
+
+    A subprocess because the distributed contracts need forced host
+    devices, which must be set via XLA_FLAGS before jax imports — exactly
+    what this conftest must not do (see NOTE above). ``launch/audit.py``
+    owns the early-device idiom; the payload here is its ``--json`` output
+    (2 forced devices, quick lane, no artifact write).
+    """
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.audit", "--quick", "--json",
+         "-o", ""],
+        capture_output=True, text=True, env=env, cwd=_ROOT)
+    assert out.returncode in (0, 1), out.stdout[-2000:] + out.stderr[-2000:]
+    return json.loads(out.stdout)
+
+
+@pytest.fixture(scope="session")
+def assert_program_budget(audit_report):
+    """Enforce a registered budget contract in one line:
+
+        entry = assert_program_budget("dist/tt3_program")
+
+    Asserts the entry was audited (not skipped) and every contract check
+    passed, then returns the entry's AUDIT payload (profiles included) for
+    any further, test-specific assertions.
+    """
+    by_name = {e["name"]: e for e in audit_report["entries"]}
+
+    def check(name: str) -> dict:
+        assert name in by_name, (name, sorted(by_name))
+        entry = by_name[name]
+        assert not entry["skipped"], f"{name}: skipped (no mesh?)"
+        assert entry["ok"], (name, entry["violations"])
+        return entry
+
+    return check

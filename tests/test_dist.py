@@ -288,14 +288,17 @@ def test_distributed_tt1_fused_sweep_two_device():
     2-device (2, 1) mesh — data=2, so the row collectives are real —
     (a) is numerically at parity with the local
     ``reduce_to_band`` band, (b) satisfies the reduction invariants, and
-    (c) issues O(1) host dispatches per sweep (budget: 3) — while the
-    stepwise per-panel baseline pays O(n/w), proving the counter counts."""
+    (c) issues O(1) host dispatches per sweep (the registry's
+    ``TT1_FUSED_MAX_DISPATCHES``) — while the stepwise per-panel baseline
+    pays O(n/w), proving the counter counts."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
         import jax, jax.numpy as jnp
         jax.config.update("jax_enable_x64", True)
         import numpy as np
+        from repro.analysis.static_audit import (
+            TT1_FUSED_MAX_DISPATCHES, TT1_STEPWISE_DISPATCHES_PER_PANEL)
         from repro.core.band_storage import unpack_band
         from repro.core.sbr import reduce_to_band
         from repro.dist import eigensolver as de
@@ -308,7 +311,7 @@ def test_distributed_tt1_fused_sweep_two_device():
         W, Q1 = de.dist_reduce_to_band(mesh, C, w)
         jax.block_until_ready((W, Q1))
         fused = de.dispatch_count()
-        assert fused <= 3, fused
+        assert fused <= TT1_FUSED_MAX_DISPATCHES, fused
         Wl, Q1l = np.asarray(W), np.asarray(Q1)
         Wsym = 0.5 * (Wl + Wl.T)
         # invariants: orthogonal Q1, exact band mask, Q1^T C Q1 = W
@@ -328,7 +331,8 @@ def test_distributed_tt1_fused_sweep_two_device():
         Ws, Q1s = de.dist_reduce_to_band_stepwise(mesh, C, w)
         jax.block_until_ready((Ws, Q1s))
         n_panels = len(range(0, n - w - 1, w))
-        assert de.dispatch_count() >= 4 * n_panels, de.dispatch_count()
+        assert de.dispatch_count() >= (
+            TT1_STEPWISE_DISPATCHES_PER_PANEL * n_panels), de.dispatch_count()
         np.testing.assert_allclose(np.asarray(Ws), Wsym, atol=1e-11)
         # odd n (not divisible by the 2 row shards): the identity-padding
         # path must stay one fused dispatch and match the local reduction
@@ -338,7 +342,8 @@ def test_distributed_tt1_fused_sweep_two_device():
         de.reset_dispatch_count()
         W2, Q12 = de.dist_reduce_to_band(mesh, C2, w)
         jax.block_until_ready((W2, Q12))
-        assert de.dispatch_count() <= 3, de.dispatch_count()
+        assert de.dispatch_count() <= TT1_FUSED_MAX_DISPATCHES, (
+            de.dispatch_count())
         assert W2.shape == (n2, n2) and Q12.shape == (n2, n2)
         W2l, Q12l = np.asarray(W2), np.asarray(Q12)
         band2 = reduce_to_band(C2, w=w)
@@ -422,12 +427,15 @@ def test_distributed_invert_parity_two_device_tt():
 def test_distributed_ke_collective_and_dispatch_budget_two_device():
     """Communication-avoiding regression pins, fast lane (2 devices):
 
-    1. The lowered ``ke_restart_program`` contains at most 2 collective ops
-       (one psum + one all_gather per block step — the whole segment is one
-       fori_loop, so the body appears once in the StableHLO text). A
-       regression to per-matvec or per-column communication would add ops.
-    2. The host issues at most ``n_restart + 2`` dispatches for the whole
-       Krylov stage (one fused program per restart + filter prep).
+    1. The registered ``dist/ke_restart_program`` budget contract holds on
+       both mesh orientations — at most 2 collectives per block step
+       (psum + all_gather), an exact static total, zero dynamic whiles —
+       and its StableHLO cross-reference stays within the published
+       ``KE_HLO_*`` caps (the whole segment is one fori_loop, so the body
+       appears once in the text). A regression to per-matvec or per-column
+       communication would break the contract.
+    2. The host issues at most ``ke_dispatch_budget(n_restart)`` dispatches
+       for the whole Krylov stage (one fused program per restart + prep).
     3. The solve actually converges at the benchmark settings (invert +
        tol=1e-9) and matches the exact spectrum.
     """
@@ -437,25 +445,24 @@ def test_distributed_ke_collective_and_dispatch_budget_two_device():
         import jax, jax.numpy as jnp
         jax.config.update("jax_enable_x64", True)
         import numpy as np
+        from repro.analysis.static_audit import (
+            AuditSpec, KE_HLO_ALL_GATHER_MAX, KE_HLO_ALL_REDUCE_MAX,
+            check_entry, get_entry, ke_dispatch_budget, register_all)
         from repro.data.problems import md_like
         from repro.dist import eigensolver as de
 
-        n, s, p, m = 64, 4, 4, 24
+        spec = AuditSpec()                  # n=64, s=4, p=4, m=24
+        n, s, p, m = spec.n, spec.s, spec.p, spec.m
         prob = md_like(n)
         for shape in ((1, 2), (2, 1)):
             mesh = jax.make_mesh(shape, ("data", "model"))
-            # 1. collective count in the lowered per-restart program
-            prog = de.ke_restart_program(mesh, n, p, m, s,
-                                         de.restart_schedule(s, m, p)[0],
-                                         "LA", "float64")
-            C = jnp.eye(n, dtype=jnp.float64)
-            V = jnp.zeros((n, m + p), jnp.float64)
-            T = jnp.zeros((m + p, m + p), jnp.float64)
-            txt = prog.lower(C, V, T, jnp.asarray(0),
-                             jnp.asarray(1e-9)).as_text()
-            n_ar = txt.count("stablehlo.all_reduce")
-            n_ag = txt.count("stablehlo.all_gather")
-            assert n_ar <= 1 and n_ag <= 1, (shape, n_ar, n_ag)
+            # 1. the registered budget contract, on this orientation
+            register_all(spec, mesh=mesh)
+            rep = check_entry(get_entry("dist/ke_restart_program"))
+            assert rep.ok, (shape, rep.violations)
+            hlo = rep.profiles[0].hlo_counts
+            assert hlo["stablehlo.all_reduce"] <= KE_HLO_ALL_REDUCE_MAX, hlo
+            assert hlo["stablehlo.all_gather"] <= KE_HLO_ALL_GATHER_MAX, hlo
             # 2 + 3. dispatch budget and convergence at benchmark settings
             de.reset_dispatch_count()
             evals, X, info = de.solve_ke_distributed(
@@ -463,8 +470,8 @@ def test_distributed_ke_collective_and_dispatch_budget_two_device():
                 filter_degree=8, invert=True, return_info=True)
             assert info["converged"], info
             assert info["fused"], info
-            assert de.dispatch_count() <= info["n_restart"] + 2, (
-                de.dispatch_count(), info)
+            assert de.dispatch_count() <= ke_dispatch_budget(
+                info["n_restart"]), (de.dispatch_count(), info)
             np.testing.assert_allclose(np.asarray(evals),
                                        np.asarray(prob.exact_evals[:s]),
                                        rtol=1e-8, atol=1e-10)
@@ -485,8 +492,10 @@ def test_distributed_tt3_spectrum_partition_two_device():
         (the column-norm reduction may reassociate at ulp level on the
         narrow local slices) — for even and uneven (padded) index counts
         and shuffled ``ks``,
-    (b) lowers to exactly the budgeted collectives (1 lam all_gather + one
-        in-loop Z all_gather appearing once in the fori body), and
+    (b) satisfies the registered ``dist/tt3_program`` contract at this
+        shape — exactly ``tt3_dist_collectives(iters)`` static collectives
+        (1 lam all_gather + one Z all_gather per refinement round) with the
+        ``TT3_HLO_ALL_GATHER_MAX`` StableHLO cross-reference — and
     (c) drives ``solve_tt_distributed``: sharded vs replicated TT3 end to
         end, Z assembled from per-shard index slices, err <= 1e-10.
     """
@@ -496,6 +505,9 @@ def test_distributed_tt3_spectrum_partition_two_device():
         import jax, jax.numpy as jnp
         jax.config.update("jax_enable_x64", True)
         import numpy as np
+        from repro.analysis.static_audit import (
+            AuditSpec, TT3_HLO_ALL_GATHER_MAX, check_entry, get_entry,
+            register_all, tt3_dist_collectives)
         from repro.core.tridiag_eig import eigh_tridiag_selected
         from repro.data.problems import md_like
         from repro.dist import eigensolver as de
@@ -514,14 +526,17 @@ def test_distributed_tt3_spectrum_partition_two_device():
             assert np.array_equal(np.asarray(lam_d), np.asarray(lam_r))
             assert np.abs(np.asarray(Z_d)
                           - np.asarray(Z_r)).max() <= 1e-12
-        # (b) collective budget in the lowered program: the lam gather and
-        # the per-round Z gather (one fori body) — a regression to
-        # per-shift or per-round-unrolled communication would add ops
-        prog = de.tt3_program(mesh, n, 8, 80, 3, de.SCAN_UNROLL, "float64")
-        txt = prog.lower(d, e, jnp.arange(8),
-                         jnp.zeros((n, 8), jnp.float64)).as_text()
-        n_ag = txt.count("stablehlo.all_gather")
-        assert n_ag <= 2, n_ag
+        # (b) the registered collective contract at THIS shape: the lam
+        # gather plus one Z gather per round, exactly — a regression to
+        # per-shift or per-round-unrolled communication breaks the pin
+        tt3_spec = AuditSpec(n=n, s=8)
+        register_all(tt3_spec, mesh=mesh)
+        rep = check_entry(get_entry("dist/tt3_program"))
+        assert rep.ok, rep.violations
+        assert rep.total_collectives == tt3_dist_collectives(
+            tt3_spec.tt3_iters), rep.total_collectives
+        hlo = rep.profiles[0].hlo_counts
+        assert hlo["stablehlo.all_gather"] <= TT3_HLO_ALL_GATHER_MAX, hlo
         # (c) end to end: sharded vs replicated TT3 through the full
         # two-stage pipeline (s=3 exercises the uneven padding there too)
         prob = md_like(32)

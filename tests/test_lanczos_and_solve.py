@@ -157,9 +157,11 @@ def test_lanczos_dispatch_count_per_restart():
 
     Each restart is one jitted m-step segment + one jitted restart-math +
     a single-scalar device_get — so total dispatches stay <= m + O(1) per
-    restart by a wide margin (we assert the much tighter actual budget),
-    and the matvec closure itself is only ever called at trace time.
+    restart by a wide margin (we assert the registry's much tighter
+    ``lanczos_single_dispatch_budget``), and the matvec closure itself is
+    only ever called at trace time.
     """
+    from repro.analysis.static_audit import lanczos_single_dispatch_budget
     from repro.core import lanczos
     n, s, m = 96, 4, 24
     C, _ = _sym_with_known_spectrum(n, K1)
@@ -171,7 +173,8 @@ def test_lanczos_dispatch_count_per_restart():
     assert res.converged
     n_restart = res.n_restart
     # 2 jitted calls per restart; m + O(1) would be the old per-step budget
-    assert lanczos.dispatch_count() <= 3 * n_restart + 4
+    assert lanczos.dispatch_count() <= lanczos_single_dispatch_budget(
+        n_restart)
     assert lanczos.dispatch_count() <= n_restart * (m + 4)
     # the matvec traces once for the per-solve segment jit, never per step
     assert op.calls <= 2
@@ -185,6 +188,7 @@ def test_lanczos_dispatch_budget_block_and_filtered():
     restart plus 2 for the bounds-probe / filter prep — and the matvec
     closure still only ever runs at trace time (once each for the probe,
     the filter, and the segment program)."""
+    from repro.analysis.static_audit import lanczos_block_dispatch_budget
     from repro.core import lanczos
     n, s, p = 96, 4, 4
     C, _ = _sym_with_known_spectrum(n, K1)
@@ -193,7 +197,8 @@ def test_lanczos_dispatch_budget_block_and_filtered():
     res = lanczos.lanczos_solve(op, s, which="SA", n=n, p=p,
                                 filter_degree=8, max_restarts=200)
     assert res.converged
-    assert lanczos.dispatch_count() <= 2 * res.n_restart + 2
+    assert lanczos.dispatch_count() <= lanczos_block_dispatch_budget(
+        res.n_restart)
     assert op.calls <= 6
     # the filter work is accounted: probe steps + degree * p extra matvecs
     assert res.n_matvec > 8 * p

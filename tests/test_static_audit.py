@@ -1,0 +1,253 @@
+"""Tests for the static program auditor (analysis.static_audit).
+
+Three layers:
+
+* **walker units** — in-process checks of the jaxpr walk's counting
+  semantics (scan multiplication, unroll, nesting, convert tracking,
+  dynamic-while reporting) on tiny synthetic programs;
+* **contract machinery** — a seeded precision leak the linter must catch,
+  a deliberately impossible budget that must fail, and the Pallas
+  tile/signature lint;
+* **golden profiles** — the 2-device audit payload (session-scoped
+  ``audit_report`` fixture, which subprocesses ``launch/audit.py``)
+  pinned against the hand-verified program shapes of the distributed
+  KE restart segment and the TT1 band sweep.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.analysis.static_audit import (
+    AuditEntry, AuditSpec, BudgetContract, ProgramSpec,
+    KE_COLLECTIVES_PER_BLOCK_STEP, TT1_COLLECTIVES_PER_PANEL,
+    check_entry, hlo_counts, lint_signature_parity, profile_fn)
+from repro.analysis.static_audit.pallas_lint import (
+    _lint_block_shape, errors)
+
+
+# --------------------------------------------------------------------------
+# walker units
+# --------------------------------------------------------------------------
+
+def test_scan_length_multiplies_static_counts():
+    def prog(x):
+        def body(c, _):
+            return c.astype(jnp.float32).astype(jnp.float64) + 1.0, None
+        c, _ = lax.scan(body, x, None, length=5)
+        return c
+
+    prof = profile_fn(prog, jnp.zeros((), jnp.float64), with_hlo=False)
+    # one downcast + one upcast site, each executed once per trip
+    assert prof.converts["float64->float32"] == 5
+    assert prof.converts["float32->float64"] == 5
+    assert prof.loop_steps_static == 5
+    assert len(prof.loops) == 1 and prof.loops[0].length == 5
+
+
+def test_scan_unroll_reduces_sequential_steps():
+    def prog(x):
+        def body(c, _):
+            return c + 1.0, None
+        c, _ = lax.scan(body, x, None, length=6, unroll=2)
+        return c
+
+    prof = profile_fn(prog, jnp.zeros((), jnp.float64), with_hlo=False)
+    # 6 trips at unroll=2 -> 3 sequential steps (what variant_model prices)
+    assert prof.loop_steps_static == 3
+    assert prof.loops[0].unroll == 2
+
+
+def test_nested_scans_multiply():
+    def prog(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d.astype(jnp.float32).astype(jnp.float64), None
+            d, _ = lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = lax.scan(outer, x, None, length=4)
+        return c
+
+    prof = profile_fn(prog, jnp.zeros((), jnp.float64), with_hlo=False)
+    assert prof.converts["float64->float32"] == 12   # 4 outer x 3 inner
+    assert prof.loop_steps_static == 4 + 4 * 3
+
+
+def test_dynamic_while_reported_not_multiplied():
+    def prog(x):
+        return lax.while_loop(lambda c: c < 100.0, lambda c: c * 2.0, x)
+
+    prof = profile_fn(prog, jnp.asarray(1.0, jnp.float64), with_hlo=False)
+    assert prof.dynamic_whiles == 1
+    assert any(lp.kind == "while" and lp.steps is None for lp in prof.loops)
+
+
+def test_hlo_counts_on_lowered_text():
+    def prog(x):
+        c, _ = lax.scan(lambda c, _: (c + 1.0, None), x, None, length=4)
+        return c
+
+    prof = profile_fn(prog, jnp.zeros((), jnp.float64))
+    # the scan lowers to exactly one stablehlo.while in the module text
+    assert prof.hlo_counts["stablehlo.while"] == 1
+    assert hlo_counts("stablehlo.all_gather x stablehlo.all_gather")[
+        "stablehlo.all_gather"] == 2
+
+
+# --------------------------------------------------------------------------
+# contract machinery
+# --------------------------------------------------------------------------
+
+def _entry(fn, args, contract, name="synthetic"):
+    return AuditEntry(
+        name=name,
+        build=lambda: [ProgramSpec(name=name, fn=fn, args=args,
+                                   with_hlo=False)],
+        contract=contract)
+
+
+def test_seeded_precision_leak_is_caught():
+    """Regression seed for satellite 2: core/ and dist/ audit clean today
+    (AUDIT.json shows zero f64 downcasts), so prove the linter *would*
+    catch one by injecting the classic accidental-demotion pattern."""
+    def leaky(x):
+        return (x.astype(jnp.float32) * 2).astype(jnp.float64)
+
+    x = jnp.zeros((4, 4), jnp.float64)
+    prof = profile_fn(leaky, x, with_hlo=False)
+    assert prof.f64_downcasts() == {"float64->float32": 1}
+
+    rep = check_entry(_entry(leaky, (x,), BudgetContract(
+        forbid_f64_downcasts=True,
+        # float32 intentionally outside the allowed set too
+    )))
+    assert not rep.ok
+    assert any("precision leak" in v for v in rep.violations)
+    assert any("float32" in v and "outside allowed set" in v
+               for v in rep.violations)
+
+
+def test_clean_program_passes_same_contract():
+    def clean(x):
+        return x * 2.0
+
+    x = jnp.zeros((4, 4), jnp.float64)
+    rep = check_entry(_entry(clean, (x,), BudgetContract(
+        max_dispatches=1, forbid_f64_downcasts=True)))
+    assert rep.ok, rep.violations
+
+
+def test_impossible_budget_fails():
+    def prog(x):
+        c, _ = lax.scan(lambda c, _: (c + 1.0, None), x, None, length=4)
+        return c
+
+    x = jnp.zeros((), jnp.float64)
+    rep = check_entry(_entry(prog, (x,), BudgetContract(
+        max_dispatches=0, exact_collectives=999)))
+    assert not rep.ok
+    assert any("dispatches 1 > budget 0" in v for v in rep.violations)
+    assert any("!= pinned 999" in v for v in rep.violations)
+
+
+def test_pallas_tile_lint_rules():
+    assert _lint_block_shape("k", (8, 128)) == []
+    assert _lint_block_shape("k", (16, 256)) == []
+    lane_err = _lint_block_shape("k", (8, 130))
+    assert [f.severity for f in lane_err] == ["error"]
+    sub_err = _lint_block_shape("k", (12, 128))
+    assert [f.severity for f in sub_err] == ["error"]
+    # sub-tile lanes are warnings (Mosaic pads small operands)
+    assert all(f.severity == "warn" for f in _lint_block_shape("k", (8, 64)))
+
+
+def test_kernel_signature_parity_holds():
+    findings = lint_signature_parity()
+    assert errors(findings) == [], [f.detail for f in errors(findings)]
+
+
+# --------------------------------------------------------------------------
+# recompile hazard: same bucket shape must hit the pipeline cache
+# --------------------------------------------------------------------------
+
+def test_same_bucket_hits_pipeline_cache():
+    from repro.core import batched
+
+    kwargs = dict(band_width=4, m=12, max_restarts=8, p=2)
+    fn1, key1 = batched.get_pipeline(32, 3, "KE", "smallest", **kwargs)
+    before = batched.cache_stats()
+    fn2, key2 = batched.get_pipeline(32, 3, "KE", "smallest", **kwargs)
+    after = batched.cache_stats()
+    assert key1 == key2
+    assert fn2 is fn1, "identical bucket recompiled (jit cache miss hazard)"
+    assert after["hits"] == before["hits"] + 1
+    # a genuinely different bucket must NOT alias the cached program
+    fn3, key3 = batched.get_pipeline(32, 3, "KE", "largest", **kwargs)
+    assert key3 != key1 and fn3 is not fn1
+
+
+# --------------------------------------------------------------------------
+# golden profiles (2-device audit subprocess via the session fixture)
+# --------------------------------------------------------------------------
+
+def test_audit_payload_overall_ok(audit_report):
+    assert audit_report["ok"], audit_report["summary"]
+    assert audit_report["summary"]["budget_violations"] == 0
+    assert audit_report["summary"]["precision_leaks"] == 0
+    assert audit_report["summary"]["crosscheck_failures"] == 0
+
+
+def test_golden_profile_ke_restart(assert_program_budget):
+    """The fused KE restart segment: ONE dispatch, exactly 2 collectives
+    (psum + all_gather) per block step, m/p = 6 steps at the audit spec."""
+    spec = AuditSpec()
+    entry = assert_program_budget("dist/ke_restart_program")
+    assert entry["dispatches"] == 1
+    steps = spec.m // spec.p
+    assert entry["max_collectives_per_step"] == KE_COLLECTIVES_PER_BLOCK_STEP
+    assert entry["total_collectives"] == KE_COLLECTIVES_PER_BLOCK_STEP * steps
+    (prog,) = entry["programs"]
+    assert prog["collective_counts"] == {"all_reduce": steps,
+                                         "all_gather": steps}
+    scans = [lp for lp in prog["loops"] if lp["kind"] == "scan"]
+    assert any(lp["length"] == steps for lp in scans)
+    assert prog["dynamic_whiles"] == 0
+    assert prog["f64_downcasts"] == {}
+
+
+def test_golden_profile_band_sweep(assert_program_budget):
+    """The fused TT1 sweep: gather(panel) + psum(coupling) + gather(Z)
+    = 3 collectives per panel, times n/w = 7 panels, plus the band
+    repack as a second (collective-free) dispatch."""
+    spec = AuditSpec()
+    entry = assert_program_budget("dist/band_sweep_program")
+    n_panels = 7                       # _n_panels(n=64, w=8)
+    assert entry["dispatches"] == 2    # sweep program + band repack
+    assert entry["max_collectives_per_step"] == TT1_COLLECTIVES_PER_PANEL
+    assert entry["total_collectives"] == TT1_COLLECTIVES_PER_PANEL * n_panels
+    sweep = next(p for p in entry["programs"]
+                 if p["name"] == "band_sweep_program")
+    assert sweep["collective_counts"] == {"all_gather": 2 * n_panels,
+                                          "all_reduce": n_panels}
+    assert sweep["dynamic_whiles"] == 0
+    assert sweep["f64_downcasts"] == {}
+
+
+def test_golden_tt3_collective_structure(assert_program_budget):
+    """Distributed TT3 is 1 + iters collectives: one cluster all_gather
+    up front, one merge all_gather per refinement iteration."""
+    spec = AuditSpec()
+    entry = assert_program_budget("dist/tt3_program")
+    assert entry["total_collectives"] == 1 + spec.tt3_iters
+    assert entry["max_collectives_per_step"] == 1
+
+
+def test_crosscheck_model_vs_counted(audit_report):
+    """Every StageCost cross-check agreed — and the exact ones really
+    are exact (TT2/TT4 loop ladders, KE dispatch structure)."""
+    checks = {(c["stage"], c["field"]): c for c in audit_report["crosscheck"]}
+    assert all(c["ok"] for c in checks.values()), [
+        k for k, c in checks.items() if not c["ok"]]
+    for key in [("TT2", "loop_steps"), ("TT4", "loop_steps"),
+                ("KE", "dispatches"), ("TT1", "collectives_per_panel")]:
+        assert key in checks and checks[key]["relation"] == "exact"
