@@ -1,0 +1,230 @@
+"""Mixed-precision pipeline benchmark: fp64 vs demoted GEMM stages + refinement.
+
+Two measurement layers, both against the SAME Table-3 accuracy gate the
+test harness enforces (a fast wrong answer fails the benchmark):
+
+* **per-stage** (``core.gsyeig.solve``): one pencil per cell, every
+  precision of ``core.precision`` side by side, so the table shows WHERE
+  the demotion pays (TD1, TT1/TT2/TT4, the Krylov matvec) and what the
+  adaptive fp64 refinement epilogue (``RF``) costs on top.
+* **end-to-end serving** (``core.batched.solve_batched``): a bucket of
+  pencils through the ONE-program pipeline with the fixed-step fp64
+  refinement fused in — the production path, where the refinement
+  amortizes instead of paying a host loop per solve. This is the layer
+  the CI gate judges.
+
+    PYTHONPATH=src python -m benchmarks.bench_mixed [--quick]
+
+``--quick`` runs the n=256 cell set and EXITS NONZERO unless mixed
+precision beats fp64 end-to-end (batched layer) on at least one variant.
+Emits ``artifacts/BENCH_mixed.json`` plus the usual CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+PRECISIONS = ("fp64", "mixed", "fast")
+#: the shared Table-3 tolerance — identical to the accuracy harness
+TOL = 1e-12
+
+
+# --------------------------------------------------------------------------
+# per-stage layer: core.gsyeig.solve
+# --------------------------------------------------------------------------
+
+def _solve_timed(prob, s, variant, precision, band_width, max_restarts):
+    from repro.core import solve
+    invert = variant in ("KE", "KI")       # md pencil: the paper's MD trick
+    res = solve(prob.A, prob.B, s, variant=variant, which="smallest",
+                invert=invert, band_width=band_width,
+                max_restarts=max_restarts, precision=precision)
+    jax.block_until_ready(res.X)
+    return res
+
+
+def bench_stage_cell(kind: str, n: int, s: int, variant: str,
+                     band_width: int, max_restarts: int,
+                     repeats: int) -> dict:
+    from repro.core import accuracy_report
+    from repro.data.problems import dft_like, md_like
+    prob = (md_like if kind == "md" else dft_like)(n)
+
+    runs: dict = {}
+    for precision in PRECISIONS:
+        # warm: compile + populate caches; keep the warm result for the
+        # accuracy gate and the refinement trajectory
+        res = _solve_timed(prob, s, variant, precision, band_width,
+                           max_restarts)
+        acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
+        rel, orth = float(acc.relative_residual), float(acc.b_orthogonality)
+        assert max(rel, orth) <= TOL, (
+            f"{variant}/n{n}/{precision}: residual {rel:.2e} / "
+            f"orthogonality {orth:.2e} above the Table-3 tolerance "
+            f"{TOL:.0e} — timing a wrong answer is meaningless")
+
+        totals, stage_runs = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            r = _solve_timed(prob, s, variant, precision, band_width,
+                             max_restarts)
+            totals.append(time.perf_counter() - t0)
+            stage_runs.append(r.stage_times)
+        med = sorted(range(repeats), key=lambda i: totals[i])[repeats // 2]
+        rinfo = res.info.get("refinement")
+        runs[precision] = {
+            "total_s": totals[med],
+            "stage_times_s": {k: float(v)
+                              for k, v in stage_runs[med].items()},
+            "relative_residual": rel,
+            "b_orthogonality": orth,
+            "refine_steps": int(rinfo["steps"]) if rinfo else 0,
+            "refine_converged": bool(rinfo["converged"]) if rinfo else True,
+            "refine_overhead_s": float(stage_runs[med].get("RF", 0.0)),
+        }
+
+    base = runs["fp64"]["total_s"]
+    stages = sorted({k for r in runs.values() for k in r["stage_times_s"]})
+    return {
+        "cell": f"{kind}_n{n}_s{s}_{variant}",
+        "workload": kind, "n": n, "s": s, "variant": variant,
+        "precisions": runs,
+        "stage_table": {
+            st: {p: runs[p]["stage_times_s"].get(st) for p in PRECISIONS}
+            for st in stages},
+        "speedup_mixed": base / runs["mixed"]["total_s"],
+        "speedup_fast": base / runs["fast"]["total_s"],
+    }
+
+
+# --------------------------------------------------------------------------
+# end-to-end serving layer: core.batched.solve_batched (the CI gate)
+# --------------------------------------------------------------------------
+
+def bench_batched_cell(kind: str, n: int, s: int, variant: str, batch: int,
+                       repeats: int, precisions=PRECISIONS) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import accuracy_report
+    from repro.core.batched import solve_batched
+    from repro.data.problems import dft_like, md_like
+    gen = md_like if kind == "md" else dft_like
+    probs = [gen(n, key=jax.random.PRNGKey(100 + i)) for i in range(batch)]
+    A = jnp.stack([p.A for p in probs])
+    B = jnp.stack([p.B for p in probs])
+
+    runs: dict = {}
+    for precision in precisions:
+        res = solve_batched(A, B, s, variant=variant,
+                            precision=precision)        # warm / compile
+        worst = 0.0
+        for i, p_ in enumerate(probs):
+            acc = accuracy_report(p_.A, p_.B, res.X[i], res.evals[i])
+            worst = max(worst, float(acc.relative_residual),
+                        float(acc.b_orthogonality))
+        assert worst <= TOL, (
+            f"batched {variant}/n{n}/{precision}: worst metric "
+            f"{worst:.2e} above the Table-3 tolerance {TOL:.0e}")
+
+        totals = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            r = solve_batched(A, B, s, variant=variant, precision=precision)
+            jax.block_until_ready(r.evals)
+            totals.append(time.perf_counter() - t0)
+        t = sorted(totals)[len(totals) // 2]
+        runs[precision] = {
+            "total_s": t,
+            "pencils_per_s": batch / t,
+            "worst_table3_metric": worst,
+            "refine_steps": int(r.info["refine_steps"]),
+        }
+
+    base = runs["fp64"]["total_s"]
+    out = {
+        "cell": f"{kind}_n{n}_s{s}_{variant}_b{batch}",
+        "workload": kind, "n": n, "s": s, "variant": variant,
+        "batch": batch, "precisions": runs,
+    }
+    for p in precisions:
+        if p != "fp64":
+            out[f"speedup_{p}"] = base / runs[p]["total_s"]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI gate: n=256 cells only; fail unless mixed "
+                         "beats fp64 end-to-end on >= 1 variant")
+    ap.add_argument("--ns", type=int, nargs="*", default=[128, 256])
+    ap.add_argument("--s", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--band-width", type=int, default=16)
+    ap.add_argument("--max-restarts", type=int, default=500)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--outdir", default="artifacts")
+    args = ap.parse_args()
+
+    ns = [256] if args.quick else args.ns
+    repeats = 2 if args.quick else args.repeats
+    variants = ("TD", "TT", "KE")
+
+    stage_cells = [bench_stage_cell("md", n, args.s, v, args.band_width,
+                                    args.max_restarts, repeats)
+                   for n in ns for v in variants]
+    # gate layer: the bucketed pipelines with fused fixed-step refinement.
+    # quick mode skips 'fast' (bf16 emulation off-TPU is slow and the gate
+    # judges mixed); the full run records all three.
+    bat_prec = ("fp64", "mixed") if args.quick else PRECISIONS
+    batched_cells = [bench_batched_cell("md", n, args.s, v, args.batch,
+                                        repeats, precisions=bat_prec)
+                     for n in ns for v in ("TD", "TT")]
+
+    print("name,us_per_call,derived")
+    for c in stage_cells:
+        print(f"bench_mixed_solve_{c['cell']},"
+              f"{c['precisions']['mixed']['total_s'] * 1e6:.1f},"
+              f"fp64={c['precisions']['fp64']['total_s'] * 1e3:.1f}ms;"
+              f"mixed={c['speedup_mixed']:.2f}x;"
+              f"fast={c['speedup_fast']:.2f}x;"
+              f"rf={c['precisions']['mixed']['refine_steps']}steps")
+    for c in batched_cells:
+        print(f"bench_mixed_batched_{c['cell']},"
+              f"{c['precisions']['mixed']['total_s'] * 1e6:.1f},"
+              f"fp64={c['precisions']['fp64']['total_s'] * 1e3:.1f}ms;"
+              f"mixed={c.get('speedup_mixed', 0.0):.2f}x")
+
+    gate_cells = [c for c in batched_cells if c["n"] == 256] or batched_cells
+    mixed_wins = any(c.get("speedup_mixed", 0.0) > 1.0 for c in gate_cells)
+    payload = {
+        "tolerance": TOL,
+        "repeats": repeats,
+        "stage_cells": stage_cells,
+        "batched_cells": batched_cells,
+        "mixed_beats_fp64_at_n256": mixed_wins,
+    }
+    os.makedirs(args.outdir, exist_ok=True)
+    out = os.path.join(args.outdir, "BENCH_mixed.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out}")
+
+    if args.quick and not mixed_wins:
+        print("QUICK GATE FAILED: mixed precision beat fp64 end-to-end on "
+              "no variant at n=256", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

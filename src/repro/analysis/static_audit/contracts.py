@@ -46,6 +46,15 @@ KE_HLO_ALL_GATHER_MAX = 1
 TT3_HLO_ALL_GATHER_MAX = 2
 
 
+#: dtypes the mixed-precision (fp32 compute) pipelines may mention on top
+#: of the fp64 set: the demoted GEMM stages and the fp32 LU of the
+#: refinement corrector
+MIXED_ALLOWED_DTYPES: Tuple[str, ...] = DEFAULT_ALLOWED_DTYPES + ("float32",)
+#: the fast (bf16 storage / fp32 accumulation) pipelines additionally
+#: carry bfloat16 operands
+FAST_ALLOWED_DTYPES: Tuple[str, ...] = MIXED_ALLOWED_DTYPES + ("bfloat16",)
+
+
 def ke_dispatch_budget(n_restart: int) -> int:
     """Host dispatches of the fused distributed Krylov stage: one program
     per thick restart, plus prep (bounds probe / Chebyshev filter) and the
@@ -175,16 +184,18 @@ def _build_lanczos_solve_jit(spec: AuditSpec):
                         with_hlo=False)]
 
 
-def _build_solve_batched(spec: AuditSpec, variant: str):
+def _build_solve_batched(spec: AuditSpec, variant: str,
+                         precision: str = "fp64"):
     from repro.core.batched import get_pipeline
     n, s, batch = spec.n // 2, spec.s, spec.batch
     fn, _ = get_pipeline(n, s, variant, "smallest", band_width=4,
                          p=spec.p if variant in ("KE", "KI") else 1,
-                         max_restarts=8)
+                         max_restarts=8, precision=precision)
     A = _sds(batch, n, n, dtype=spec.dtype)
     B = _sds(batch, n, n, dtype=spec.dtype)
     keys = jax.random.split(jax.random.PRNGKey(0), batch)
-    return [ProgramSpec(name=f"solve_batched_{variant}", fn=fn,
+    suffix = "" if precision == "fp64" else f"_{precision}"
+    return [ProgramSpec(name=f"solve_batched_{variant}{suffix}", fn=fn,
                         args=(A, B, keys), with_hlo=False)]
 
 
@@ -403,6 +414,30 @@ def register_all(spec: Optional[AuditSpec] = None,
                 notes="one vmapped program per shape bucket"),
             tags=("serve", "quick")))
 
+    # mixed/fast precision policies: the same bucketed pipelines with the
+    # GEMM stages demoted + fused fp64 refinement. The contract DECLARES
+    # the policy's downcast edges (core.precision.declared_downcasts) and
+    # widens the dtype set; any demotion outside the declaration is still
+    # a leak, and the budget shape must not change with precision.
+    from repro.core.precision import declared_downcasts
+    precision_allowed = {"mixed": MIXED_ALLOWED_DTYPES,
+                         "fast": FAST_ALLOWED_DTYPES}
+    for variant, precision in (("TD", "mixed"), ("TT", "mixed"),
+                               ("KE", "mixed"), ("KI", "mixed"),
+                               ("TT", "fast"), ("KE", "fast")):
+        register(AuditEntry(
+            name=f"serve/solve_batched_{variant}_{precision}",
+            build=partial(_build_solve_batched, spec, variant, precision),
+            contract=BudgetContract(
+                max_dispatches=1, exact_collectives=0,
+                max_dynamic_whiles=0 if variant in ("TD", "TT") else 1,
+                allowed_dtypes=precision_allowed[precision],
+                declared_downcasts=declared_downcasts(precision),
+                notes=f"{precision} pipeline: declared GEMM-stage "
+                      "demotions + fused fp64 refinement, same budget "
+                      "shape as the fp64 bucket"),
+            tags=("serve", "precision", "quick")))
+
     register(AuditEntry(
         name="dist/band_sweep_program",
         build=lambda: _build_band_sweep(spec, _mesh()),
@@ -477,6 +512,7 @@ def register_all(spec: Optional[AuditSpec] = None,
 
 __all__ = [
     "AuditSpec", "register_all", "make_mesh_2dev",
+    "MIXED_ALLOWED_DTYPES", "FAST_ALLOWED_DTYPES",
     "TT1_FUSED_MAX_DISPATCHES", "TT1_COLLECTIVES_PER_PANEL",
     "TT1_STEPWISE_DISPATCHES_PER_PANEL", "KE_COLLECTIVES_PER_BLOCK_STEP",
     "KE_HLO_ALL_REDUCE_MAX", "KE_HLO_ALL_GATHER_MAX",

@@ -3,10 +3,14 @@
 Two failure modes the fp64 pipelines must never pick up silently:
 
 * **precision leaks** — a ``convert_element_type`` demoting float64 to
-  float32/bf16/fp16 anywhere in a solver program (a Python ``float32``
-  literal, an fp32 intermediate from a library helper). The walker
-  records every conversion with its static count; ``find_precision_leaks``
-  surfaces the demotions. Each registered contract also forbids them
+  float32/bf16/fp16 that the program's contract did not DECLARE (a Python
+  ``float32`` literal, an fp32 intermediate from a library helper). The
+  walker records every conversion with its static count;
+  ``find_precision_leaks`` surfaces the demotions not covered by the
+  contract's ``declared_downcasts`` policy — the mixed/fast pipelines
+  declare their on-purpose GEMM-stage demotions, the fp64 contracts
+  declare nothing, so for them every downcast stays a leak. Each
+  registered contract also forbids undeclared ones
   (``forbid_f64_downcasts``), so the CLI fails on one.
 * **recompile hazards** — weak-typed inputs to a cached program: a
   Python scalar passed where an array is expected traces a *different*
@@ -18,16 +22,24 @@ Two failure modes the fp64 pipelines must never pick up silently:
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 from .profile import ProgramProfile
 from .registry import EntryReport
 
 
-def find_precision_leaks(profile: ProgramProfile) -> List[str]:
-    """Human-readable leak descriptions for one profiled program."""
+def find_precision_leaks(profile: ProgramProfile,
+                         declared: Sequence[str] = ()) -> List[str]:
+    """Human-readable leak descriptions for one profiled program.
+
+    ``declared`` lists the downcast edges the owning contract's precision
+    policy permits (``BudgetContract.declared_downcasts``); only the
+    demotions outside it are leaks.
+    """
+    allowed = set(declared)
     return [f"{profile.name}: {conv} x{count}"
-            for conv, count in sorted(profile.f64_downcasts().items())]
+            for conv, count in sorted(profile.f64_downcasts().items())
+            if conv not in allowed]
 
 
 def lint_reports(reports: Dict[str, EntryReport]) -> dict:
@@ -38,9 +50,10 @@ def lint_reports(reports: Dict[str, EntryReport]) -> dict:
     for name, rep in reports.items():
         if rep.skipped:
             continue
+        declared = rep.contract.declared_downcasts
         for prof in rep.profiles:
             leaks.extend(f"{name}/{leak}"
-                         for leak in find_precision_leaks(prof))
+                         for leak in find_precision_leaks(prof, declared))
             if prof.weak_type_inputs:
                 weak[f"{name}/{prof.name}"] = prof.weak_type_inputs
             for conv, count in prof.converts.items():

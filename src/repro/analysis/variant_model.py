@@ -51,6 +51,19 @@ VARIANTS = ("TD", "TT", "KE", "KI")
 #: variants with a distributed implementation (``mesh=`` dispatch targets)
 DISTRIBUTED_VARIANTS = ("TT", "KE")
 
+#: relative matmul throughput per compute dtype (fp32 doubles the fp64
+#: rate on both the paper's AVX cores and the MXU; bf16 doubles again)
+DTYPE_FLOP_SPEEDUP = {"float64": 1.0, "float32": 2.0, "bfloat16": 4.0}
+DTYPE_BYTES = {"float64": 8, "float32": 4, "bfloat16": 2}
+
+#: the GEMM-heavy stages each precision level demotes (mirror of what
+#: ``core.gsyeig`` / ``core.batched`` actually cast; everything else —
+#: Cholesky/standard form, tridiagonal eigensolve, refinement — is fp64)
+DEMOTED_STAGES = ("TD1", "TD3", "TT1", "TT2", "TT4", "KE_iter", "KI_iter")
+
+_PRECISION_DTYPE = {"fp64": "float64", "mixed": "float32",
+                    "fast": "bfloat16"}
+
 
 @dataclasses.dataclass(frozen=True)
 class MachineParams:
@@ -215,12 +228,21 @@ class StageCost:
     #: loop is serialized regardless of mesh size, each step paying the
     #: runtime's per-iteration overhead)
     loop_steps: float = 0.0
+    #: compute dtype of the stage's dominant contractions; scales the flop
+    #: rate by ``DTYPE_FLOP_SPEEDUP`` and the byte traffic by the itemsize
+    #: ratio against ``machine.dtype_bytes`` (how the router prices the
+    #: mixed-precision variants without re-deriving every byte count)
+    compute_dtype: str = "float64"
 
     def seconds(self, machine: MachineParams, n_devices: int) -> float:
         p = max(int(n_devices), 1)
-        t_comp = self.flops / (p * machine.peak_flops)
-        t_mem = self.bytes / (p * machine.mem_bw)
-        t_coll = ((self.collective_bytes / machine.link_bw
+        speedup = DTYPE_FLOP_SPEEDUP.get(self.compute_dtype, 1.0)
+        byte_scale = (DTYPE_BYTES.get(self.compute_dtype, 8)
+                      / max(machine.dtype_bytes, 1))
+        t_comp = self.flops / (p * machine.peak_flops * speedup)
+        t_mem = self.bytes * min(byte_scale, 1.0) / (p * machine.mem_bw)
+        t_coll = ((self.collective_bytes * min(byte_scale, 1.0)
+                   / machine.link_bw
                    + self.collectives * machine.t_collective)
                   if p > 1 else 0.0)
         return (max(t_comp, t_mem) + t_coll
@@ -331,11 +353,29 @@ def _replay_loop_steps(n: int, w: int) -> float:
     return float(sum(n - bb for bb in range(int(w), 1, -1) if n - bb > 0))
 
 
+def _refinement_cost(n: int, s: int, b: int, steps: int) -> StageCost:
+    """RF: one fp32 LU of the shifted pencil (half-rate vs fp64 — modeled
+    by tagging the stage float32 and halving the flop count accordingly)
+    plus ``steps`` fp64 correction/Cholesky-QR/Rayleigh-Ritz sweeps over
+    the guarded (n, q) slab — see ``core.refinement``. The LU dominates,
+    so the whole stage is priced at the fp32 rate; the per-step GEMMs are
+    ~10 n^2 q fp64 flops, folded in at 2x to keep the single-dtype tag."""
+    from repro.core.refinement import default_guard
+    q = s + default_guard(s, n)
+    n2 = float(n) ** 2
+    lu_flops = 2.0 * float(n) ** 3 / 3.0
+    step_flops = steps * 10.0 * n2 * q * 2.0   # fp64 work at the fp32 tag
+    step_bytes = steps * 6.0 * n2 * b
+    return StageCost(lu_flops + step_flops, n2 * b + step_bytes, 0.0,
+                     1 + 2.0 * steps, 0.0, 0.0, compute_dtype="float32")
+
+
 def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
                 m: Optional[int] = None, n_iter: Optional[int] = None,
                 clustered: bool = False,
                 machine: Optional[MachineParams] = None,
                 p: int = 1, filter_degree: int = 0,
+                precision: str = "fp64",
                 ) -> Dict[str, StageCost]:
     """Per-stage (flops, bytes, collective_bytes, dispatches, collectives)
     per variant.
@@ -446,6 +486,21 @@ def stage_costs(variant: str, n: int, s: int, band_width: int = 8,
 
     # BT1: X = U^{-1} Y, one TRSM on an (n, s) slab
     costs["BT1"] = StageCost(n2 * s, 2 * n2 * b, n * s * b, 1)
+
+    cdtype = _PRECISION_DTYPE.get(precision)
+    if cdtype is None:
+        raise ValueError(f"precision must be one of "
+                         f"{tuple(_PRECISION_DTYPE)}, got {precision!r}")
+    if cdtype != "float64":
+        # demote exactly the stages the solvers demote, and append the
+        # fp64 refinement stage that buys the accuracy back
+        for st in DEMOTED_STAGES:
+            if st in costs:
+                costs[st] = dataclasses.replace(costs[st],
+                                                compute_dtype=cdtype)
+        from repro.core.precision import default_refine_steps
+        costs["RF"] = _refinement_cost(n, s, b,
+                                       default_refine_steps(precision))
     return costs
 
 
@@ -483,7 +538,8 @@ def choose_variant(n: int, s: int, band_width: int = 8,
                    mesh_shape: Optional[Sequence[int]] = None,
                    allow: Optional[Sequence[str]] = None,
                    krylov_block: int = 1,
-                   filter_degree: int = 0) -> VariantChoice:
+                   filter_degree: int = 0,
+                   precision: str = "fp64") -> VariantChoice:
     """Pick the fastest variant under the cost model.
 
     With a multi-device ``mesh_shape`` the candidate set narrows to the
@@ -493,6 +549,9 @@ def choose_variant(n: int, s: int, band_width: int = 8,
     KE/KI candidates would actually run (block size p divides the
     collective-latency term; a Chebyshev filter cuts the clustered-spectrum
     iteration estimate) — they do not affect the direct variants.
+    ``precision`` prices the mixed pipelines: the demoted stages run at
+    the reduced-dtype rate and the fp64 refinement stage is added back,
+    so the router can decide when demotion actually pays per variant.
     """
     p = _mesh_devices(mesh_shape)
     if allow is None:
@@ -506,7 +565,7 @@ def choose_variant(n: int, s: int, band_width: int = 8,
         table[v] = predict_stage_times(
             v, n, s, machine=machine, mesh_shape=mesh_shape,
             band_width=band_width, m=m, n_iter=n_iter,
-            clustered=clustered, **kkw)["Tot."]
+            clustered=clustered, precision=precision, **kkw)["Tot."]
     best = min(table, key=lambda v: (table[v], VARIANTS.index(v)))
     return VariantChoice(variant=best, predicted_s=table[best], table=table,
                          n_devices=p)

@@ -10,6 +10,10 @@ from .gsyeig import VARIANTS, GSyEigResult, solve
 from .lanczos import (LanczosResult, default_subspace, lanczos_solve,
                       lanczos_solve_jit)
 from .operators import ExplicitC, ImplicitC, apply_op
+from .precision import (PRECISIONS, compute_dtype, declared_downcasts,
+                        default_refine_steps, ensure_strong,
+                        validate_precision)
+from .refinement import refine_eigenpairs
 from .residuals import (AccuracyReport, accuracy_report, b_normalize,
                         b_orthogonality, relative_residual)
 from .sbr import (accumulate_q2, apply_q2, band_chase, band_to_tridiag,
@@ -35,6 +39,9 @@ __all__ = [
     "inverse_iteration", "eigh_tridiag_selected",
     "lanczos_solve", "lanczos_solve_jit", "LanczosResult", "default_subspace",
     "ExplicitC", "ImplicitC", "apply_op",
+    "PRECISIONS", "validate_precision", "compute_dtype",
+    "declared_downcasts", "default_refine_steps", "ensure_strong",
+    "refine_eigenpairs",
     "back_transform_generalized", "forward_transform_generalized",
     "accuracy_report", "AccuracyReport", "b_orthogonality",
     "relative_residual", "b_normalize",

@@ -28,6 +28,8 @@ from .back_transform import back_transform_generalized
 from .cholesky import cholesky_blocked, cholesky_upper
 from .lanczos import default_subspace, lanczos_solve
 from .operators import ExplicitC, ImplicitC
+from .precision import compute_dtype, ensure_strong, validate_precision
+from .refinement import REFINE_TOL, refine_eigenpairs
 from . import sbr as _sbr
 from .sbr import apply_q2, band_chase, default_n_chunks, reduce_to_band
 from .standard_form import to_standard_sygst, to_standard_two_trsm
@@ -92,6 +94,10 @@ def solve(
     machine=None,
     krylov_block: int | None = None,
     filter: int | None = None,        # noqa: A002 — the paper-facing name
+    precision: str = "fp64",
+    refine: bool | None = None,
+    refine_tol: float = REFINE_TOL,
+    refine_max_steps: int = 60,
 ) -> GSyEigResult:
     """`mesh=` (a jax.sharding.Mesh with a 'model' axis plus data axes)
     dispatches the KE and TT variants onto the distributed pipelines in
@@ -116,11 +122,33 @@ def solve(
     locally). ``filter`` is the Chebyshev start-block filter degree
     (``None`` = auto: 16 when ``clustered=True`` — the clustered wanted
     end is exactly the case the filter exists for — else off; 0 forces
-    off). Both land in ``result.info['krylov']``."""
+    off). Both land in ``result.info['krylov']``.
+
+    ``precision=`` selects the compute dtype of the GEMM-heavy stages
+    (``'fp64'`` default, ``'mixed'`` = fp32, ``'fast'`` = bf16 with fp32
+    accumulation — see ``core.precision``); Cholesky/standard form, the
+    tridiagonal eigensolve and all convergence math stay fp64. When the
+    pipeline demoted anything, ``refine`` (default: on for non-fp64)
+    runs fp64 iterative refinement of the returned eigenpairs against
+    the *original* pencil until ``refine_tol`` (the Table-3 tolerance)
+    is met — step count and residual trajectory land in
+    ``result.info['refinement']``, the wall time in
+    ``stage_times['RF']``."""
+    validate_precision(precision)
+    cdtype = compute_dtype(precision)
+    demoted = precision != "fp64"
+    if refine is None:
+        refine = demoted
+    # the declared working dtype is fp64: promote weak-typed (Python-
+    # scalar-born) pencils on entry so the first downstream op cannot
+    # silently decide the precision
+    A = ensure_strong(A)
+    B = ensure_strong(B)
     n = A.shape[0]
     times: Dict[str, float] = {}
     info: Dict[str, Any] = {"variant": variant, "n": n, "s": s,
-                            "invert": invert, "which": which}
+                            "invert": invert, "which": which,
+                            "precision": precision}
     # Krylov knobs resolve once, for the router and both solve paths
     p = krylov_block if krylov_block is not None else (
         4 if mesh is not None else 1)
@@ -136,7 +164,8 @@ def solve(
         choice = choose_variant(n, s, band_width=band_width, m=m,
                                 clustered=clustered, mesh_shape=mesh_shape,
                                 allow=allow, machine=machine,
-                                krylov_block=p, filter_degree=filter_degree)
+                                krylov_block=p, filter_degree=filter_degree,
+                                precision=precision)
         variant = choice.variant
         info["variant"] = variant
         info["router"] = choice.as_json_dict()
@@ -146,7 +175,9 @@ def solve(
     if variant in ("KE", "KI"):
         info["krylov"] = {"p": int(p), "filter_degree": int(filter_degree)}
 
-    B_orig = B
+    A_orig, B_orig, which_orig = A, B, which
+    refine_cfg = ({"tol": refine_tol, "max_steps": refine_max_steps}
+                  if refine else None)
     if invert:
         # paper's MD trick: largest eigenpairs of the inverse pair (B, A)
         A, B = B, A
@@ -168,12 +199,12 @@ def solve(
             lam, X, dinfo = solve_ke_distributed(
                 mesh, A, B, s, m=m, which=which, tol=tol,
                 max_restarts=max_restarts, key=key, return_info=True,
-                p=p, filter_degree=filter_degree)
+                p=p, filter_degree=filter_degree, precision=precision)
         else:
             from repro.dist.eigensolver import solve_tt_distributed
             lam, X, dinfo = solve_tt_distributed(
                 mesh, A, B, s, which=which, band_width=band_width, key=key,
-                return_info=True)
+                return_info=True, precision=precision)
         times.update(dinfo.pop("stage_times"))
         info.update(dinfo)
         if not info.get("converged", True):
@@ -182,7 +213,8 @@ def solve(
                 f"{info.get('n_restart', max_restarts)} restarts "
                 f"(max_restarts={max_restarts}); eigenpairs are the best "
                 f"Ritz approximations at exit")
-        return _finalize(lam, X, B_orig, invert, times, info)
+        return _finalize(lam, X, A_orig, B_orig, which_orig, invert,
+                         times, info, refine_cfg)
 
     # ---- GS1: B = U^T U --------------------------------------------------
     if gs1 == "blocked":
@@ -201,29 +233,35 @@ def solve(
     want_small = which == "smallest"
     if variant in ("TD", "TT"):
         ks = jnp.arange(s) if want_small else jnp.arange(n - s, n)
+        # the reflector/rotation stages run in the compute dtype; the
+        # tridiagonal eigensolve (TD2/TT3) is promoted back to fp64
+        Cw = C if not demoted else C.astype(cdtype)
         if variant == "TD":
             if td1 == "blocked":
-                res = _timed(times, "TD1")(_jit_td1_blocked, C, panel=32)
+                res = _timed(times, "TD1")(_jit_td1_blocked, Cw, panel=32)
             else:
-                res = _timed(times, "TD1")(_jit_td1, C)
-            lam, Z = _timed(times, "TD2")(eigh_tridiag_selected, res.d, res.e,
-                                          ks, key)
-            Y = _timed(times, "TD3")(_jit_td3, res, Z)
+                res = _timed(times, "TD1")(_jit_td1, Cw)
+            lam, Z = _timed(times, "TD2")(
+                eigh_tridiag_selected, res.d.astype(jnp.float64),
+                res.e.astype(jnp.float64), ks, key)
+            Y = _timed(times, "TD3")(_jit_td3, res, Z.astype(cdtype))
         else:
             # TT1 split: the sweep is ONE compiled program (reduce_to_band
             # is internally jitted); record the ladder choice + dispatch
             # count so the stage timing is attributable
             n_chunks = default_n_chunks(n, band_width)
             d0 = _sbr.dispatch_count()
-            band = _timed(times, "TT1")(reduce_to_band, C, w=band_width,
+            band = _timed(times, "TT1")(reduce_to_band, Cw, w=band_width,
                                         n_chunks=n_chunks)
             info["tt1"] = {"n_chunks": int(n_chunks),
                            "dispatches": int(_sbr.dispatch_count() - d0)}
             chase = _timed(times, "TT2")(band_chase, band.Wb, band_width)
-            lam, Z = _timed(times, "TT3")(eigh_tridiag_selected, chase.d,
-                                          chase.e, ks, key)
-            Y = _timed(times, "TT4")(_jit_tt4, chase, band.Q1, Z,
-                                     w=band_width)
+            lam, Z = _timed(times, "TT3")(
+                eigh_tridiag_selected, chase.d.astype(jnp.float64),
+                chase.e.astype(jnp.float64), ks, key)
+            Y = _timed(times, "TT4")(_jit_tt4, chase, band.Q1,
+                                     Z.astype(cdtype), w=band_width)
+        Y = Y.astype(jnp.float64)
     else:
         arp_which = "SA" if want_small else "LA"
         if variant == "KE":
@@ -240,7 +278,8 @@ def solve(
         lres = lanczos_solve(op, s, which=arp_which, m=m, tol=tol,
                              max_restarts=max_restarts, key=key,
                              use_kernel=use_kernel, p=p,
-                             filter_degree=filter_degree)
+                             filter_degree=filter_degree,
+                             compute_dtype=cdtype if demoted else None)
         jax.block_until_ready(lres.evecs)
         times[f"{prefix}_iter"] = time.perf_counter() - t0
         # plain-Python payloads only: info must survive json.dump in the
@@ -262,13 +301,16 @@ def solve(
     # ---- BT1: X = U^{-1} Y ----------------------------------------------
     X = _timed(times, "BT1")(_jit_bt1, U, Y)
 
-    return _finalize(lam, X, B_orig, invert, times, info)
+    return _finalize(lam, X, A_orig, B_orig, which_orig, invert, times,
+                     info, refine_cfg)
 
 
-def _finalize(lam, X, B_orig, invert: bool, times: Dict[str, float],
-              info: Dict[str, Any]) -> GSyEigResult:
+def _finalize(lam, X, A_orig, B_orig, which_orig: str, invert: bool,
+              times: Dict[str, float], info: Dict[str, Any],
+              refine_cfg: Dict[str, Any] | None = None) -> GSyEigResult:
     """Shared epilogue of the local and distributed paths: undo the
-    inverse-pair trick and total the stage timings."""
+    inverse-pair trick, refine against the original fp64 pencil when
+    asked, and total the stage timings."""
     if invert:
         lam = 1.0 / lam
         order = jnp.argsort(lam)
@@ -277,6 +319,14 @@ def _finalize(lam, X, B_orig, invert: bool, times: Dict[str, float],
         # each column to unit B-norm for the original problem's metric
         from .residuals import b_normalize
         X = b_normalize(X, B_orig)
+
+    if refine_cfg is not None:
+        t0 = time.perf_counter()
+        lam, X, rinfo = refine_eigenpairs(
+            A_orig, B_orig, lam, X, which=which_orig, **refine_cfg)
+        jax.block_until_ready(X)
+        times["RF"] = time.perf_counter() - t0
+        info["refinement"] = rinfo
 
     times["Tot."] = float(sum(v for k, v in times.items() if k != "Tot."))
     return GSyEigResult(evals=lam, X=X, stage_times=times, info=info)

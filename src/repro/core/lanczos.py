@@ -119,25 +119,40 @@ def _segment_impl(matvec, V: jax.Array, T: jax.Array, j0, p: int = 1):
                              (V, T, jnp.zeros((p, p), V.dtype)))
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "p"), donate_argnums=(1, 2))
+@partial(jax.jit, static_argnames=("use_kernel", "p", "compute_dtype"),
+         donate_argnums=(1, 2))
 def _lanczos_segment(op: Operator, V: jax.Array, T: jax.Array, j0,
-                     use_kernel: bool = False, p: int = 1):
+                     use_kernel: bool = False, p: int = 1,
+                     compute_dtype: str | None = None):
     """Operator-pytree segment: op rides along as a traced argument so one
-    compilation serves every problem of the same shape."""
-    return _segment_impl(lambda X: apply_op(op, X, use_kernel=use_kernel),
-                         V, T, j0, p)
+    compilation serves every problem of the same shape. ``compute_dtype``
+    (a dtype NAME, static) demotes ONLY the operator application — the
+    orthogonalization stays in V's dtype — without leaving this shared
+    jit cache (a per-solve jit of a demoting closure would recompile the
+    segment on every ``lanczos_solve`` call)."""
+    if compute_dtype is not None:
+        cdtype = jnp.dtype(compute_dtype)
+        op_c = jax.tree_util.tree_map(lambda a: a.astype(cdtype), op)
+        mv = lambda X: apply_op(op_c, X.astype(cdtype),  # noqa: E731
+                                use_kernel=use_kernel).astype(V.dtype)
+    else:
+        mv = lambda X: apply_op(op, X, use_kernel=use_kernel)  # noqa: E731
+    return _segment_impl(mv, V, T, j0, p)
 
 
-def _make_segment(op, use_kernel: bool, p: int):
+def _make_segment(op, use_kernel: bool, p: int,
+                  compute_dtype: str | None = None):
     """Segment driver for either op flavor.
 
     Operator pytrees reuse the module-level jitted segment (compile cache
-    shared across solves); bare matvec callables — e.g. a distributed
-    closure — get a per-solve jit (the closure is stable across the
-    restart loop, so each solve compiles the segment once)."""
+    shared across solves), including the demoted-matvec case via the
+    static ``compute_dtype`` name; bare matvec callables — e.g. a
+    distributed closure — get a per-solve jit (the closure is stable
+    across the restart loop, so each solve compiles the segment once)."""
     if isinstance(op, (ExplicitC, ImplicitC)):
-        return lambda V, T, j0: _lanczos_segment(op, V, T, j0,
-                                                 use_kernel=use_kernel, p=p)
+        return lambda V, T, j0: _lanczos_segment(
+            op, V, T, j0, use_kernel=use_kernel, p=p,
+            compute_dtype=compute_dtype)
     if callable(op):
         jit_seg = jax.jit(partial(_segment_impl, op, p=p),
                           donate_argnums=(0, 1))
@@ -148,7 +163,7 @@ def _make_segment(op, use_kernel: bool, p: int):
 @partial(jax.jit, static_argnames=("s", "keep", "m", "p", "which"))
 def _restart_math(V: jax.Array, T: jax.Array, B_q: jax.Array,
                   tol_eff: jax.Array, s: int, keep: int, m: int, p: int,
-                  which: str):
+                  which: str, resid_floor_rel: float = 0.0):
     """eigh of T_m, Ritz selection, residual bounds, thick-restart state AND
     the convergence verdict — everything per-restart in one jitted program,
     so the host only fetches one scalar (``all_conv``) to decide.
@@ -157,7 +172,12 @@ def _restart_math(V: jax.Array, T: jax.Array, B_q: jax.Array,
     generalization of |beta_m S[m-1, i]|); the thick restart keeps the
     leading ``keep`` Ritz vectors (keep is a multiple of p) plus the
     (n, p) residual block, with the (p, keep) coupling
-    ``B_q S[m-p:m, :keep]`` in the arrowhead of the new T."""
+    ``B_q S[m-p:m, :keep]`` in the arrowhead of the new T.
+
+    ``resid_floor_rel`` is the mixed-precision escape hatch: a demoted
+    matvec floors the attainable residual at ~eps_compute * ||C|| (not
+    eps * |theta_i|), so the criterion also accepts bounds under
+    ``resid_floor_rel * max|theta|`` — fp64 refinement recovers the rest."""
     Tm = 0.5 * (T[:m, :m] + T[:m, :m].T)
     theta, S = jnp.linalg.eigh(Tm)  # ascending
     if which == "LA":  # want the largest: reorder descending so wanted = first
@@ -168,7 +188,9 @@ def _restart_math(V: jax.Array, T: jax.Array, B_q: jax.Array,
     # ARPACK dsconv criterion: bound_i <= tol * max(eps^{2/3}, |theta_i|)
     eps = jnp.finfo(V.dtype).eps
     eps23 = eps ** (2.0 / 3.0)
-    conv = resid[:s] <= tol_eff * jnp.maximum(jnp.abs(theta[:s]), eps23)
+    thresh = tol_eff * jnp.maximum(jnp.abs(theta[:s]), eps23)
+    thresh = jnp.maximum(thresh, resid_floor_rel * jnp.max(jnp.abs(theta)))
+    conv = resid[:s] <= thresh
     all_conv = jnp.all(conv)
     # thick restart: keep leading `keep` Ritz pairs + the residual block
     V_new_cols = V[:, :m] @ S[:, :keep]                     # (n, keep)
@@ -242,7 +264,8 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
                   key: jax.Array | None = None, use_kernel: bool = False,
                   v0: jax.Array | None = None,
                   callback=None, n: int | None = None, p: int = 1,
-                  filter_degree: int = 0) -> LanczosResult:
+                  filter_degree: int = 0,
+                  compute_dtype=None) -> LanczosResult:
     """Host-driven thick-restart block Lanczos for s extremal eigenpairs.
 
     `op` is an Operator pytree (ExplicitC/ImplicitC) or any traceable
@@ -257,6 +280,12 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
     unwanted end; bounds from a k-step probe — see ``core.filtering``),
     which is what makes clustered spectra converge inside the budget.
     `callback(k_restart, V, T, m)` enables checkpoint hooks (see dist/).
+
+    ``compute_dtype`` (a dtype, or None = off) demotes ONLY the operator
+    application — the basis, T and all restart/convergence math stay in
+    the working dtype, and the convergence criterion is floored at the
+    demoted matvec's attainable residual (``core.refinement`` recovers
+    full accuracy afterwards).
 
     Per restart the host issues O(1) device dispatches: one jitted
     whole-segment program, one ``_restart_math``, and a single-scalar
@@ -273,12 +302,32 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
             n = v0.shape[0]
         dtype = v0.dtype if v0 is not None else jnp.float64
         matvec = op
+    resid_floor_rel = 0.0
+    seg_cdtype = None
+    cdtype = None if compute_dtype is None else jnp.dtype(compute_dtype)
+    if cdtype is not None and cdtype != jnp.dtype(dtype):
+        if isinstance(op, (ExplicitC, ImplicitC)):
+            # op stays a pytree: the module-level jitted segment demotes
+            # internally (static compute_dtype name), so the compile
+            # cache keeps being shared across solves. matvec (used by the
+            # filter / bound probes) demotes the same way.
+            op_c = jax.tree_util.tree_map(lambda a: a.astype(cdtype), op)
+            mv0 = lambda X: apply_op(op_c, X.astype(cdtype),  # noqa: E731
+                                     use_kernel=use_kernel)
+            seg_cdtype = jnp.dtype(cdtype).name
+        else:
+            base = matvec
+            mv0 = lambda X: base(X.astype(cdtype))  # noqa: E731
+        matvec = lambda X: mv0(X).astype(dtype)  # noqa: E731
+        if seg_cdtype is None:
+            op = matvec      # callable op: per-solve jit as before
+        resid_floor_rel = 8.0 * float(jnp.finfo(cdtype).eps)
     if m is None:
         m = default_subspace(s, n, p)
     assert m % p == 0 and m + p <= n + (1 if p == 1 else 0), (m, p, n)
     assert 2 * s < m + 1, (s, m)
     keep, _ = restart_schedule(s, m, p)
-    segment = _make_segment(op, use_kernel, p)
+    segment = _make_segment(op, use_kernel, p, compute_dtype=seg_cdtype)
     eps = float(jnp.finfo(dtype).eps)
     tol_eff = tol if tol > 0.0 else eps
 
@@ -310,7 +359,8 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
         n_matvec += m - j0 * p
         theta, S, resid, V_restart, T_new, all_conv = _dispatch(
             _restart_math, V, T, B_q, jnp.asarray(tol_eff, dtype),
-            s=s, keep=keep, m=m, p=p, which=which)
+            s=s, keep=keep, m=m, p=p, which=which,
+            resid_floor_rel=resid_floor_rel)
         if callback is not None:
             callback(k_restart, V, T, m)
         if bool(jax.device_get(all_conv)):
@@ -333,24 +383,35 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("s", "m", "which", "max_restarts",
-                                   "use_kernel", "p", "filter_degree"))
+                                   "use_kernel", "p", "filter_degree",
+                                   "compute_dtype"))
 def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
                       which: str = "SA", max_restarts: int = 50,
                       use_kernel: bool = False, p: int = 1,
-                      filter_degree: int = 0):
+                      filter_degree: int = 0,
+                      compute_dtype: str | None = None):
     """lax.while_loop thick-restart block Lanczos; ONE XLA program.
 
     ``v0`` is (n,) for p == 1 or an (n, p) starting block. Returns
     (evals (s,), evecs (n, s), n_restarts_used, converged). Shares the
     block segment/restart core with ``lanczos_solve`` — the two drivers
-    cannot drift.
+    cannot drift. ``compute_dtype`` (a dtype NAME, static) demotes the
+    operator application only, exactly as in ``lanczos_solve``.
     """
     n = v0.shape[0]
     dtype = v0.dtype
     eps = jnp.finfo(dtype).eps
     assert m % p == 0, (m, p)
     keep, _ = restart_schedule(s, m, p)
-    matvec = lambda X: apply_op(op, X, use_kernel=use_kernel)  # noqa: E731
+    resid_floor_rel = 0.0
+    if compute_dtype is not None and jnp.dtype(compute_dtype) != dtype:
+        cdtype = jnp.dtype(compute_dtype)
+        op_c = jax.tree_util.tree_map(lambda a: a.astype(cdtype), op)
+        matvec = lambda X: apply_op(  # noqa: E731
+            op_c, X.astype(cdtype), use_kernel=use_kernel).astype(dtype)
+        resid_floor_rel = 8.0 * float(jnp.finfo(cdtype).eps)
+    else:
+        matvec = lambda X: apply_op(op, X, use_kernel=use_kernel)  # noqa: E731
 
     X0 = v0[:, None] if v0.ndim == 1 else v0
     assert X0.shape == (n, p), (X0.shape, p)
@@ -373,7 +434,8 @@ def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
         k, V, T, j0_val, _, _, _ = state
         V, T, B_q = _segment_impl(matvec, V, T, j0_val, p)
         theta, S, resid, V_restart, T_new, conv = _restart_math(
-            V, T, B_q, eps, s, keep, m, p, which
+            V, T, B_q, eps, s, keep, m, p, which,
+            resid_floor_rel=resid_floor_rel
         )
         evecs = V[:, :m] @ S[:, :s]
         return (k + 1, V_restart, T_new, jnp.asarray(keep // p), conv,

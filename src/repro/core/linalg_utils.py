@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .precision import matmul_acc
+
 
 def symmetrize(M: jax.Array) -> jax.Array:
     """Return (M + M^T)/2 — used after two-sided updates to kill drift."""
@@ -151,16 +153,17 @@ def wy_syr2k_panel(C: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
     sweep (``core.sbr.reduce_to_band``, via ``kernels/syr2k`` on TPU) and
     the distributed sweep (``dist.sharded_la``) consume.
     """
-    X = C @ V
-    S = T.T @ (V.T @ X) @ T
-    return X @ T - 0.5 * (V @ S)
+    mm = matmul_acc
+    X = mm(C, V)
+    S = mm(mm(T.T, mm(V.T, X)), T)
+    return mm(X, T) - 0.5 * mm(V, S)
 
 
 def apply_wy_two_sided_syr2k(C: jax.Array, V: jax.Array,
                              T: jax.Array) -> jax.Array:
     """Q^T C Q for symmetric C via the SYR2K form (see `wy_syr2k_panel`)."""
     Z = wy_syr2k_panel(C, V, T)
-    return symmetrize(C - Z @ V.T - V @ Z.T)
+    return symmetrize(C - matmul_acc(Z, V.T) - matmul_acc(V, Z.T))
 
 
 def givens(a: jax.Array, b: jax.Array):

@@ -41,6 +41,10 @@ def _symm(M: jax.Array, w: jax.Array, use_kernel: bool) -> jax.Array:
         if w.ndim == 1:
             return symv_ops.symv(M, w)
         return symv_ops.symm_block(M, w)
+    if M.dtype == jnp.bfloat16:
+        # XLA fallback of the kernel's fp32-accumulating bf16 MXU path
+        return jnp.matmul(M, w, preferred_element_type=jnp.float32) \
+            .astype(M.dtype)
     return M @ w
 
 

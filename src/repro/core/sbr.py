@@ -59,6 +59,7 @@ from .linalg_utils import (
     symmetrize,
     wy_syr2k_panel,
 )
+from .precision import matmul_acc
 
 
 class BandResult(NamedTuple):
@@ -147,7 +148,7 @@ def _reduce_to_band_program(C: jax.Array, w: int, n_chunks: int) -> BandResult:
             V, T = house_panel(E, c0 + w)        # one fused panel launch
             Mt = _wy_rank2_update(Mt, V, T)
             # explicit Q1 accumulation (two GEMMs per panel, paper Sec. 2.2)
-            Q1t = Q1t - ((Q1t @ V) @ T) @ V.T
+            Q1t = Q1t - matmul_acc(matmul_acc(matmul_acc(Q1t, V), T), V.T)
             return Mt, Q1t
 
         Mt = jax.lax.slice(M, (o, o), (n, n))
@@ -188,7 +189,8 @@ _jit_slice_cols = jax.jit(
     static_argnames=("w",))
 _jit_house_panel = jax.jit(house_panel)
 _jit_wy_update = jax.jit(apply_wy_two_sided_syr2k)
-_jit_wy_right = jax.jit(lambda Q, V, T: Q - ((Q @ V) @ T) @ V.T)
+_jit_wy_right = jax.jit(
+    lambda Q, V, T: Q - matmul_acc(matmul_acc(matmul_acc(Q, V), T), V.T))
 _jit_pack = jax.jit(lambda M, w: pack_band(M, w, symmetrize=True),
                     static_argnames=("w",))
 

@@ -213,9 +213,16 @@ class TridiagEigResult(NamedTuple):
     Z: jax.Array    # (n, s) eigenvectors of T
 
 
+def default_tridiag_method() -> str:
+    """Backend-resolved default for ``eigh_tridiag_selected``: the Pallas
+    kernels compiled on a real TPU, the fused-XLA batched program (which
+    beats interpret-mode Pallas by orders of magnitude) everywhere else."""
+    return "kernel" if jax.default_backend() == "tpu" else "batched"
+
+
 def eigh_tridiag_selected(d: jax.Array, e: jax.Array, ks: jax.Array,
                           key: jax.Array | None = None,
-                          method: str = "batched") -> TridiagEigResult:
+                          method: str | None = None) -> TridiagEigResult:
     """Selected eigenpairs of tridiag(d, e) at indices ``ks`` (any order).
 
     ``ks`` is sorted internally and the result unpermuted, so
@@ -226,15 +233,19 @@ def eigh_tridiag_selected(d: jax.Array, e: jax.Array, ks: jax.Array,
     tests/test_tridiag_eig.py).
 
     method:
+      None      — backend autodetect (:func:`default_tridiag_method`):
+                  'kernel' on a real TPU, 'batched' elsewhere.
       'scan'    — the legacy two-program baseline (bisection jit + inverse
                   iteration jit, unroll=1 Sturm scans).
-      'batched' — default: ONE fused program from
-                  ``kernels.tridiag_eig.ops`` with unrolled Sturm scans;
-                  bitwise-identical values, measurably faster (the
-                  BENCH_tridiag gate), and the path ``core.batched`` vmaps.
+      'batched' — ONE fused program from ``kernels.tridiag_eig.ops`` with
+                  unrolled Sturm scans; bitwise-identical values,
+                  measurably faster (the BENCH_tridiag gate), and the
+                  path ``core.batched`` vmaps.
       'kernel'  — the Pallas kernels (interpret mode off-TPU), for parity
                   tests and TPU execution.
     """
+    if method is None:
+        method = default_tridiag_method()
     if key is None:
         key = jax.random.PRNGKey(12021)
     ks = jnp.asarray(ks)

@@ -56,6 +56,7 @@ from repro.core.lanczos import (_qr_posdiag, _restart_math, _segment_impl,
                                 restart_schedule)
 from repro.core.linalg_utils import symmetrize
 from repro.core.operators import ExplicitC
+from repro.core.precision import compute_dtype, validate_precision
 from repro.core.sbr import (_jit_house_panel, _jit_pack, _jit_slice_cols,
                             _n_panels, apply_q2, band_chase)
 from repro.core.tridiag_eig import (TridiagEigResult, _cluster_ids,
@@ -206,6 +207,7 @@ def solve_ke_distributed(
     p: int = 4,
     filter_degree: int = 0,
     invert: bool = False,
+    precision: str = "fp64",
 ) -> Tuple[jax.Array, jax.Array]:
     """s extremal eigenpairs of A X = B X Lambda on a 2-D device mesh.
 
@@ -217,10 +219,21 @@ def solve_ke_distributed(
     inverse pair (B, A) for its LARGEST eigenpairs and map back — which is
     what makes the log-spaced MD spectrum converge fast at its tiny end.
 
+    ``precision`` demotes the Krylov stage only (GS1/GS2/BT1 stay fp64):
+    ``mixed`` runs the whole fused restart program — operand, basis and
+    restart math — in fp32; ``fast`` keeps the basis fp32 but ships the
+    sharded operand in bf16 (the matvec accumulates in fp32 via dtype
+    promotion). The convergence test is floored at the demoted operand's
+    attainable residual; callers recover fp64 accuracy by refinement
+    (``core.refinement`` via ``gsyeig.solve(..., precision=...)``).
+
     Returns ``(evals (s,) ascending, X (n, s) B-orthonormal)``; with
     ``return_info=True`` a third dict carries per-stage wall-clock times
     and Lanczos counters (n_matvec, n_restart, converged).
     """
+    validate_precision(precision)
+    demoted = precision != "fp64"
+    cdtype = compute_dtype(precision)
     B_orig = B
     if invert:
         A, B = B, A
@@ -236,7 +249,8 @@ def solve_ke_distributed(
 
     U, C = _standard_form(mesh, A, B, timed)
     arp_which = "SA" if which == "smallest" else "LA"
-    dtype = C.dtype
+    # work dtype of the basis/restart math; the operand may sit lower
+    wdtype = jnp.float32 if demoted else C.dtype
     keep, _ = restart_schedule(s, m, p)
     rs, ax, R, cm, divisible = _mesh_tiling(mesh, n)
 
@@ -248,18 +262,22 @@ def solve_ke_distributed(
         C_rep = jax.device_put(C, NamedSharding(mesh, P(None, None)))
         res = lanczos_solve(ExplicitC(C_rep), s, which=arp_which, m=m,
                             tol=tol, max_restarts=max_restarts, key=key,
-                            p=p, filter_degree=filter_degree)
+                            p=p, filter_degree=filter_degree,
+                            compute_dtype=cdtype if demoted else None)
         lam, Y = res.evals, res.evecs
         n_matvec, n_restart = res.n_matvec, res.n_restart
         converged = res.converged
     else:
         # the Krylov operand lives 2-D-sharded: rows over data axes, cols
         # over 'model' — the layout the fused block matvec consumes
+        if demoted:
+            C = C.astype(cdtype)
+        dtype = C.dtype
         C = jax.device_put(C, NamedSharding(mesh, P(rs, "model")))
         rep = NamedSharding(mesh, P(None, None))
         dname = jnp.dtype(dtype).name
         X0 = jax.device_put(
-            jax.random.normal(key, (n, p), dtype), rep)
+            jax.random.normal(key, (n, p), wdtype), rep)
         n_matvec = 0
         if filter_degree > 0:
             kb = probe_steps(s, n)
@@ -270,10 +288,14 @@ def solve_ke_distributed(
         else:
             Q0, _ = _qr_posdiag(X0)
         V = jax.device_put(
-            jnp.zeros((n, m + p), dtype).at[:, :p].set(Q0), rep)
-        T = jax.device_put(jnp.zeros((m + p, m + p), dtype), rep)
+            jnp.zeros((n, m + p), wdtype).at[:, :p].set(Q0), rep)
+        T = jax.device_put(jnp.zeros((m + p, m + p), wdtype), rep)
+        # the demoted operand floors the attainable residual at
+        # ~eps(cdtype) * ||C||; ask for no more (core.lanczos uses the
+        # same 8x floor on its local demoted path)
         eps = float(jnp.finfo(dtype).eps)
-        tol_eff = jnp.asarray(tol if tol > 0.0 else eps, dtype)
+        eps_eff = 8.0 * eps if demoted else eps
+        tol_eff = jnp.asarray(tol if tol > 0.0 else eps_eff, wdtype)
         prog = ke_restart_program(mesh, n, p, m, s, keep, arp_which, dname)
         j0 = 0
         converged = False
@@ -290,6 +312,8 @@ def solve_ke_distributed(
     jax.block_until_ready(Y)
     times["KE_iter"] = time.perf_counter() - t0
 
+    if demoted:
+        lam, Y = lam.astype(A.dtype), Y.astype(A.dtype)
     order = jnp.argsort(lam)
     lam, Y = lam[order], Y[:, order]
 
@@ -309,7 +333,7 @@ def solve_ke_distributed(
                 "n_restart": int(n_restart),
                 "converged": bool(converged),
                 "p": int(p), "filter_degree": int(filter_degree),
-                "fused": bool(divisible)}
+                "precision": precision, "fused": bool(divisible)}
         return lam, X, info
     return lam, X
 
@@ -526,6 +550,7 @@ def solve_tt_distributed(
     key: Optional[jax.Array] = None,
     return_info: bool = False,
     shard_tt3: bool = True,
+    precision: str = "fp64",
 ) -> Tuple[jax.Array, jax.Array]:
     """s extremal eigenpairs of A X = B X Lambda via the distributed
     two-stage reduction (the paper's TT variant, ELPA2-style).
@@ -535,10 +560,20 @@ def solve_tt_distributed(
     over it (``dist_tridiag_eig``: per-device index slices, EleMRRR-style;
     ``shard_tt3=False`` falls back to the replicated fused path — same
     values bitwise). Only the bulge chase (TT2) runs replicated — the
-    O(n^2 w) stage the paper measures as negligible. Returns
-    ``(evals (s,) ascending, X (n, s))``; with ``return_info=True`` a third
-    dict carries per-stage wall-clock times.
+    O(n^2 w) stage the paper measures as negligible.
+
+    ``precision`` demotes the reduction stages (TT1/TT2/TT4) to the
+    compute dtype of ``core.precision``; GS1/GS2, the tridiagonal
+    eigensolve and BT1 stay fp64, and callers recover fp64 eigenpair
+    accuracy via ``core.refinement`` (``gsyeig.solve(..., mesh=...,
+    precision=...)`` does so automatically).
+
+    Returns ``(evals (s,) ascending, X (n, s))``; with
+    ``return_info=True`` a third dict carries per-stage wall-clock times.
     """
+    validate_precision(precision)
+    demoted = precision != "fp64"
+    cdtype = compute_dtype(precision)
     n = A.shape[0]
     if key is None:
         key = jax.random.PRNGKey(20120520)
@@ -546,6 +581,8 @@ def solve_tt_distributed(
     timed = _make_timer(times)
 
     U, C = _standard_form(mesh, A, B, timed)
+    if demoted:
+        C = C.astype(cdtype)
 
     # TT1: dense -> band, Q1 stays mesh-resident
     W, Q1 = timed("TT1", lambda c: dist_reduce_to_band(mesh, c, band_width),
@@ -564,24 +601,29 @@ def solve_tt_distributed(
     # inverse-iterates its contiguous slice of the wanted indices (O(n s / P)
     # local work, 1 + iters collectives); replicated fallback is bitwise
     ks = jnp.arange(s) if which == "smallest" else jnp.arange(n - s, n)
+    d64 = chase.d.astype(A.dtype)
+    e64 = chase.e.astype(A.dtype)
     if shard_tt3:
         lam, Z = timed("TT3", lambda d, e: dist_tridiag_eig(
-            mesh, d, e, ks, key), chase.d, chase.e)
+            mesh, d, e, ks, key), d64, e64)
     else:
         lam, Z = timed("TT3", lambda d, e: eigh_tridiag_selected(
-            d, e, ks, key), chase.d, chase.e)
+            d, e, ks, key), d64, e64)
 
     # TT4: Y = Q1 (Q2 Z) — Q2 Z replays the recorded rotations over the
     # replicated (n, s) slab; the product against the row-sharded Q1 is a
     # collective-free panel matmul
+    Zc = Z.astype(cdtype) if demoted else Z
     Y = timed("TT4", lambda z: dist_panel_matmul(
-        mesh, Q1, apply_q2(chase, z, band_width)), Z)
+        mesh, Q1, apply_q2(chase, z, band_width)), Zc)
+    if demoted:
+        Y = Y.astype(A.dtype)
 
     # BT1: X = U^{-1} Y
     X = timed("BT1", lambda y: dist_trsm_left(mesh, U, y), Y)
 
     if return_info:
         info = {"stage_times": times, "band_width": int(band_width),
-                "tt3_sharded": bool(shard_tt3)}
+                "precision": precision, "tt3_sharded": bool(shard_tt3)}
         return lam, X, info
     return lam, X

@@ -28,9 +28,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _house_panel_kernel(rs_ref, e_ref, v_ref, t_ref):
     P, b = e_ref.shape
-    dtype = e_ref.dtype
+    # reflector norms/taus are far too cancellation-sensitive for bf16:
+    # a bf16 panel computes in fp32 (the MXU-accumulator dtype) and casts
+    # V/T back at the store; fp32/fp64 panels compute in kind
+    dtype = (jnp.float32 if e_ref.dtype == jnp.bfloat16 else e_ref.dtype)
     rs = rs_ref[0]
-    R = e_ref[...]
+    R = e_ref[...].astype(dtype)
     V = jnp.zeros((P, b), dtype)
     T = jnp.zeros((b, b), dtype)
     rows = jax.lax.broadcasted_iota(jnp.int32, (P, 1), 0)
@@ -70,8 +73,8 @@ def _house_panel_kernel(rs_ref, e_ref, v_ref, t_ref):
         T = jnp.where((rows_b == j) & (cols_b == j), tau, T)
         V = jnp.where(colsP == j, v, V)
 
-    v_ref[...] = V
-    t_ref[...] = T
+    v_ref[...] = V.astype(v_ref.dtype)
+    t_ref[...] = T.astype(t_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

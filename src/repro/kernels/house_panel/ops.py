@@ -39,6 +39,11 @@ def house_panel(E: jax.Array, row_start,
     """
     use_kernel = force_kernel or _on_tpu()
     if not use_kernel:
+        if E.dtype == jnp.bfloat16:
+            # mirror the kernel's fp32-accumulating bf16 path: reflector
+            # norms/taus cancel too hard for bf16 arithmetic
+            V, T = house_panel_ref(E.astype(jnp.float32), row_start)
+            return V.astype(E.dtype), T.astype(E.dtype)
         return house_panel_ref(E, row_start)
     rows, b = E.shape
     pad = (-rows) % 8

@@ -22,12 +22,15 @@ from jax.experimental import pallas as pl
 
 
 def _rot_apply_kernel(x0_ref, x1_ref, c_ref, s_ref, y0_ref, y1_ref):
-    x0 = x0_ref[...]          # (bg, bl)
-    x1 = x1_ref[...]
-    c = c_ref[...]            # (bg, 1) -> broadcasts over the lane dim
-    s = s_ref[...]
-    y0_ref[...] = c * x0 + s * x1
-    y1_ref[...] = -s * x0 + c * x1
+    # bf16 tiles rotate in fp32 (VPU fma in the accumulator dtype) and
+    # cast at the store; fp32/fp64 compute in kind
+    wt = jnp.float32 if x0_ref.dtype == jnp.bfloat16 else x0_ref.dtype
+    x0 = x0_ref[...].astype(wt)   # (bg, bl)
+    x1 = x1_ref[...].astype(wt)
+    c = c_ref[...].astype(wt)     # (bg, 1) -> broadcasts over the lane dim
+    s = s_ref[...].astype(wt)
+    y0_ref[...] = (c * x0 + s * x1).astype(y0_ref.dtype)
+    y1_ref[...] = (-s * x0 + c * x1).astype(y1_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bg", "bl", "interpret"))

@@ -34,6 +34,12 @@ def rot_apply(pairs: jax.Array, cs: jax.Array,
     """
     use_kernel = force_kernel or _on_tpu()
     if not use_kernel:
+        if pairs.dtype == jnp.bfloat16:
+            # fp32-accumulate the rotation (the kernel's bf16 path does
+            # the same); the store casts back to bf16
+            out = rot_apply_ref(pairs.astype(jnp.float32),
+                                cs.astype(jnp.float32))
+            return out.astype(pairs.dtype)
         return rot_apply_ref(pairs, cs)
     G, _, L = pairs.shape
     bg = 8 if G >= 8 else max(G, 1)

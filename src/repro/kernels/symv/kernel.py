@@ -33,6 +33,13 @@ def _symv_kernel(ib, jb, a_ref, xj_ref, xi_ref, yu_ref, yl_ref):
     j = jb[t]
 
     a = a_ref[...]
+    # the output refs double as cross-tile accumulators; for bf16 operands
+    # the wrappers allocate them in fp32 (the MXU accumulator dtype) and
+    # preferred_element_type pins every per-tile contraction to match
+    acc_t = yu_ref.dtype
+
+    def dot(m, v):
+        return jnp.dot(m, v, preferred_element_type=acc_t)
 
     # --- diagonal tile: only its upper triangle is semantic. Mask in-register
     # and fold in its own mirror: y_up[i] = triu(A_ii) x_i + striu(A_ii)^T x_i.
@@ -43,12 +50,12 @@ def _symv_kernel(ib, jb, a_ref, xj_ref, xi_ref, yu_ref, yl_ref):
         cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
         a_up = jnp.where(rows <= cols, a, 0)
         a_strict = jnp.where(rows < cols, a, 0)
-        yu_ref[...] = a_up @ xj_ref[...] + a_strict.T @ xj_ref[...]
+        yu_ref[...] = dot(a_up, xj_ref[...]) + dot(a_strict.T, xj_ref[...])
 
     # --- strictly-upper tile: y_up[i] += A_ij x_j
     @pl.when(j > i)
     def _off():
-        yu_ref[...] += a @ xj_ref[...]
+        yu_ref[...] += dot(a, xj_ref[...])
 
     # --- mirrored contribution: y_lo[j] += A_ij^T x_i (strictly upper only).
     # Every j-block's first visit is at i == 0 (row-major triangle order), so
@@ -60,7 +67,7 @@ def _symv_kernel(ib, jb, a_ref, xj_ref, xi_ref, yu_ref, yl_ref):
 
     @pl.when(j > i)
     def _acc_lo():
-        yl_ref[...] += a.T @ xi_ref[...]
+        yl_ref[...] += dot(a.T, xi_ref[...])
 
 
 def triangle_indices(nb: int):
@@ -96,13 +103,14 @@ def symv_pallas(A: jax.Array, x: jax.Array, block: int = 512,
             pl.BlockSpec((block,), lambda t, ib, jb: (jb[t],)),
         ],
     )
+    acc_t = jnp.float32 if A.dtype == jnp.bfloat16 else A.dtype
     y_up, y_lo = pl.pallas_call(
         _symv_kernel,
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((n,), A.dtype)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n,), acc_t)] * 2,
         interpret=interpret,
     )(jnp.asarray(ib), jnp.asarray(jb), A, x, x)
-    return y_up + y_lo
+    return (y_up + y_lo).astype(A.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -139,10 +147,11 @@ def symm_block_pallas(A: jax.Array, X: jax.Array, block: int = 512,
             pl.BlockSpec((block, p), lambda t, ib, jb: (jb[t], 0)),
         ],
     )
+    acc_t = jnp.float32 if A.dtype == jnp.bfloat16 else A.dtype
     y_up, y_lo = pl.pallas_call(
         _symv_kernel,
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((n, p), A.dtype)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n, p), acc_t)] * 2,
         interpret=interpret,
     )(jnp.asarray(ib), jnp.asarray(jb), A, X, X)
-    return y_up + y_lo
+    return (y_up + y_lo).astype(A.dtype)

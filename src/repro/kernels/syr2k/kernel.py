@@ -18,24 +18,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _syr2k_kernel(c_ref, vi_ref, wj_ref, wi_ref, vj_ref, o_ref, *, alpha):
+def _syr2k_kernel(c_ref, vi_ref, wj_ref, wi_ref, vj_ref, o_ref, *, alpha,
+                  acc_dtype):
+    # sub-fp32 operands accumulate in fp32 on the MXU (acc_dtype pins the
+    # accumulator); the store casts back to the storage dtype
     contrib = jnp.dot(vi_ref[...], wj_ref[...].T,
-                      preferred_element_type=o_ref.dtype)
+                      preferred_element_type=acc_dtype)
     contrib += jnp.dot(wi_ref[...], vj_ref[...].T,
-                       preferred_element_type=o_ref.dtype)
-    o_ref[...] = c_ref[...] + alpha * contrib
+                       preferred_element_type=acc_dtype)
+    acc = c_ref[...].astype(acc_dtype) + alpha * contrib
+    o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "alpha", "interpret"))
 def syr2k_pallas(C: jax.Array, V: jax.Array, W: jax.Array,
                  alpha: float = -1.0, bm: int = 256,
                  interpret: bool = True) -> jax.Array:
-    """C + alpha (V W^T + W V^T); n % bm == 0 (ops.py pads), k arbitrary."""
+    """C + alpha (V W^T + W V^T); n % bm == 0 (ops.py pads), k arbitrary.
+
+    bf16 operands take the fp32-accumulating MXU path (result cast back to
+    bf16 at the store); fp32/fp64 accumulate in kind.
+    """
     n, k = V.shape
     assert C.shape == (n, n) and W.shape == (n, k) and n % bm == 0
+    acc_dtype = jnp.float32 if C.dtype == jnp.bfloat16 else C.dtype
     nb = n // bm
     return pl.pallas_call(
-        functools.partial(_syr2k_kernel, alpha=alpha),
+        functools.partial(_syr2k_kernel, alpha=alpha, acc_dtype=acc_dtype),
         grid=(nb, nb),
         in_specs=[
             pl.BlockSpec((bm, bm), lambda i, j: (i, j)),

@@ -89,6 +89,12 @@ def main() -> None:
                     help="Lanczos residual tolerance (0 = machine-eps "
                          "criterion; 1e-9 is the converging setting on "
                          "the paper's spectra)")
+    ap.add_argument("--precision", choices=["fp64", "mixed", "fast"],
+                    default="fp64",
+                    help="compute dtype of the GEMM-heavy stages (mixed = "
+                         "fp32, fast = bf16/fp32-acc); non-fp64 runs the "
+                         "fp64 refinement epilogue and reports its "
+                         "trajectory")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL mesh (e.g. 4x2): run the KE or TT "
                          "variant (or --variant auto, restricted to those "
@@ -110,6 +116,7 @@ def main() -> None:
                 td1=args.td1, band_width=args.band_width, m=args.m,
                 max_restarts=args.max_restarts, mesh=mesh, tol=args.tol,
                 krylov_block=args.krylov_block, filter=args.filter_degree,
+                precision=args.precision,
                 # the router's clustered-spectrum hint: the DFT generator's
                 # low end is the paper's slow-Lanczos regime
                 clustered=(args.problem == "dft"
@@ -133,6 +140,17 @@ def main() -> None:
     }
     if "router" in res.info:
         payload["router"] = res.info["router"]
+    if "refinement" in res.info:
+        rinfo = res.info["refinement"]
+        payload["precision"] = args.precision
+        payload["refinement"] = {
+            "steps": int(rinfo["steps"]),
+            "converged": bool(rinfo["converged"]),
+            "relative_residual": [float(x)
+                                  for x in rinfo["relative_residual"]],
+            "b_orthogonality": [float(x)
+                                for x in rinfo["b_orthogonality"]],
+        }
     if args.json:
         print(json.dumps(payload, indent=1))
     else:

@@ -76,3 +76,123 @@ def test_tolerance_table_is_shared():
     assert set(TABLE3_TOLERANCES) == {"relative_residual",
                                       "b_orthogonality"}
     assert all(0 < t <= 1e-9 for t in TABLE3_TOLERANCES.values())
+
+
+# ---------------------------------------------------------------------------
+# precision axis: the mixed/fast pipelines must pass the SAME Table-3
+# tolerances as fp64 — that is the whole contract of the fp64 iterative
+# refinement (core.refinement): demote the GEMM-heavy stages, then buy
+# every digit back against the original pencil.
+# ---------------------------------------------------------------------------
+
+PRECISION_CELLS = [
+    pytest.param(v, p, prec,
+                 marks=(pytest.mark.slow,)
+                 if _heavy(v, p, "smallest") else (),
+                 id=f"{prec}-{p}-{v}")
+    for v in VARIANTS for p in sorted(PROBLEMS)
+    for prec in ("fp64", "mixed", "fast")]
+
+
+@pytest.mark.parametrize("variant,problem,precision", PRECISION_CELLS)
+def test_table3_metrics_precision(variant, problem, precision):
+    prob = PROBLEMS[problem](N)
+    invert = (problem == "md_like" and variant in ("KE", "KI"))
+    res = solve(prob.A, prob.B, S, variant=variant, which="smallest",
+                band_width=8, max_restarts=800, invert=invert,
+                precision=precision)
+    acc = accuracy_report(prob.A, prob.B, res.X, res.evals)
+    metrics = {"relative_residual": float(acc.relative_residual),
+               "b_orthogonality": float(acc.b_orthogonality)}
+    for name, tol in TABLE3_TOLERANCES.items():
+        assert metrics[name] <= tol, (
+            f"{variant}/{problem}/{precision}: {name}={metrics[name]:.3e} "
+            f"exceeds the shared Table-3 tolerance {tol:.1e}")
+    if precision == "fp64":
+        assert "refinement" not in res.info
+    else:
+        rinfo = res.info["refinement"]
+        assert rinfo["converged"]
+        # the refinement ran against the ORIGINAL fp64 pencil and stopped
+        # at the Table-3 tolerance
+        assert rinfo["tol"] <= TABLE3_TOLERANCES["relative_residual"]
+
+
+def test_weak_typed_pencil_is_promoted_at_the_api_boundary():
+    """Negative test of the weak-type recompile/precision hazard: a
+    Python-scalar-born pencil (``jnp.full`` and friends carry
+    ``weak_type=True``) must be promoted to committed fp64 at the
+    ``solve`` / ``solve_batched`` boundary — identical results to the
+    committed-dtype call, strong outputs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.batched import solve_batched
+    from repro.core.precision import ensure_strong
+
+    n, s = 16, 2
+    ii = jnp.arange(n)
+    # scalar-born SPD pencil: every constituent is a Python float, so the
+    # weak_type flag survives the whole construction
+    A_weak = jnp.full((n, n), 0.01).at[ii, ii].add(2.0)
+    B_weak = jnp.full((n, n), 0.0).at[ii, ii].set(1.0)
+    assert A_weak.weak_type and B_weak.weak_type      # the hazard is real
+
+    prom = ensure_strong(A_weak)
+    assert not prom.weak_type and prom.dtype == jnp.float64
+
+    A_strong = jnp.asarray(np.asarray(A_weak))
+    B_strong = jnp.asarray(np.asarray(B_weak))
+    assert not A_strong.weak_type
+
+    res_w = solve(A_weak, B_weak, s, variant="TD")
+    res_s = solve(A_strong, B_strong, s, variant="TD")
+    assert res_w.evals.dtype == jnp.float64 and not res_w.evals.weak_type
+    assert not res_w.X.weak_type
+    np.testing.assert_array_equal(np.asarray(res_w.evals),
+                                  np.asarray(res_s.evals))
+
+    key = jax.random.PRNGKey(0)
+    bat_w = solve_batched(A_weak[None], B_weak[None], s, key=key)
+    bat_s = solve_batched(A_strong[None], B_strong[None], s, key=key)
+    assert bat_w.evals.dtype == jnp.float64 and not bat_w.evals.weak_type
+    np.testing.assert_array_equal(np.asarray(bat_w.evals),
+                                  np.asarray(bat_s.evals))
+
+
+def test_refinement_converges_on_ill_conditioned_pencil():
+    """Unit test of core.refinement alone: start from fp32-quality
+    eigenpairs of a pencil with cond(B) ~ 1e8 and check the corrector
+    iteration restores full fp64 accuracy."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.refinement import refine_eigenpairs
+
+    n, s = 64, 4
+    key = jax.random.PRNGKey(42)
+    kq, kb = jax.random.split(key)
+    Q, _ = jnp.linalg.qr(jax.random.normal(kq, (n, n), jnp.float64))
+    lam_a = jnp.logspace(-2.0, 2.0, n, dtype=jnp.float64)
+    A = (Q * lam_a) @ Q.T
+    # B SPD with an 8-decade spread: the fp32 Cholesky of this pencil
+    # loses ~half the digits, which is exactly what refinement must fix
+    Qb, _ = jnp.linalg.qr(jax.random.normal(kb, (n, n), jnp.float64))
+    lam_b = jnp.logspace(-4.0, 4.0, n, dtype=jnp.float64)
+    B = (Qb * lam_b) @ Qb.T
+
+    # fp32-quality starting pairs: solve in fp32 and round-trip
+    from repro.core import solve as _solve
+    res32 = _solve(A, B, s, variant="TD", which="smallest",
+                   precision="mixed", refine=False)
+    lam0 = res32.evals
+    X0 = res32.X.astype(jnp.float32).astype(jnp.float64)
+
+    lam, X, info = refine_eigenpairs(A, B, lam0, X0, which="smallest",
+                                     tol=1e-12, max_steps=60)
+    assert info["converged"], info
+    # trajectories start at the unrefined input and end below tolerance
+    assert info["relative_residual"][-1] <= 1e-12
+    assert info["b_orthogonality"][-1] <= 1e-12
+    assert info["steps"] >= 1
+    assert info["relative_residual"][-1] < info["relative_residual"][0]
