@@ -100,6 +100,108 @@ def bench_bucket(kind: str, n: int, s: int, variant: str, batch: int,
     }
 
 
+def bench_chaos(s: int, batch: int, band_width: int, max_restarts: int,
+                repeats: int) -> dict:
+    """Fault-injected bursty trace vs the same trace without faults.
+
+    The chaos trace replaces a slice of a healthy MD request stream with
+    non-SPD pencils (same total length, same bucket packing); the engine
+    (``on_failure='recover'``) must quarantine and dead-letter the
+    poisoned lanes WITHOUT sinking the healthy traffic: the gate is
+    healthy-request throughput within 20% of the clean run, with every
+    submission accounted for (done + dead letters, no silent drops)."""
+    from repro.resilience.faults import nonspd_pencil
+    from repro.serve.eigen_engine import EigenEngine
+
+    n = 64
+    n_healthy, n_poisoned = 8 * batch, max(2, batch // 2)
+    total = n_healthy + n_poisoned
+    healthy = _problems("md", n, total)
+    poisoned = [tuple(map(jax.numpy.asarray, nonspd_pencil(n, seed=i)))
+                for i in range(n_poisoned)]
+    # poisoned requests land spread across the stream (bursty-but-not-
+    # adjacent), displacing — not inserting next to — healthy ones, so
+    # the clean and chaos traces pack into identical bucket sequences
+    stride = total // n_poisoned
+    poison_at = {1 + i * stride: i for i in range(n_poisoned)}
+
+    def trace(with_faults: bool):
+        reqs = []
+        for j, p in enumerate(healthy):
+            if with_faults and j in poison_at:
+                A, B = poisoned[poison_at[j]]
+                reqs.append((A, B, False))
+            else:
+                reqs.append((p.A, p.B, True))
+        return reqs
+
+    def run(reqs):
+        eng = EigenEngine(slots=batch, bucket_shapes=[n], variant="TD",
+                          band_width=band_width,
+                          max_restarts=max_restarts,
+                          on_failure="recover", max_retries=1)
+        uids = [eng.submit(A, B, s) for A, B, _ in reqs]
+        for _ in uids:
+            eng.tick()
+        done = eng.run_until_drained(flush=True)
+        return eng, uids, done
+
+    run(trace(False))                     # warm the bucket pipeline
+    run(trace(True))                      # warm the quarantine solve path
+
+    t_clean, t_chaos = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run(trace(False))
+        t_clean.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        eng, uids, done = run(trace(True))
+        t_chaos.append(time.perf_counter() - t0)
+
+    # accounting on the last chaos run: nothing silently dropped, every
+    # poisoned lane carries its diagnosis
+    retired = {r.uid for r in done} | {r.uid for r in eng.dead_letters}
+    assert retired == set(uids), "silent drop: submitted != retired"
+    assert len(eng.dead_letters) == n_poisoned, \
+        f"{len(eng.dead_letters)} dead letters != {n_poisoned} injected"
+    assert all(r.info["dead_letter"]["reason"] == "cholesky_breakdown"
+               for r in eng.dead_letters)
+    assert len(done) == n_healthy
+    uid_to_prob = {uid: healthy[j] for j, uid in enumerate(uids)
+                   if j not in poison_at}
+    healthy_err = float(max(
+        np.max(np.abs(r.evals
+                      - np.asarray(uid_to_prob[r.uid].exact_evals[:s])))
+        for r in done))
+    assert healthy_err < 1e-6, f"chaos run corrupted healthy lanes: " \
+                               f"{healthy_err:.2e}"
+
+    # both runs submit `total` requests; the gate compares throughput of
+    # the requests that retire healthy (clean: all of them; chaos: all
+    # but the dead-lettered poison)
+    clean_s = sorted(t_clean)[len(t_clean) // 2]
+    chaos_s = sorted(t_chaos)[len(t_chaos) // 2]
+    clean_tput = total / clean_s
+    chaos_tput = n_healthy / chaos_s
+    ratio = chaos_tput / clean_tput
+    assert ratio >= 0.8, \
+        f"chaos sank healthy throughput to {ratio:.2f}x of clean " \
+        f"({chaos_tput:.1f}/s vs {clean_tput:.1f}/s)"
+
+    return {
+        "bucket": f"chaos_md_n{n}_s{s}_TD",
+        "n": n, "s": s, "batch": batch,
+        "n_requests": total,
+        "n_healthy": n_healthy, "n_poisoned": n_poisoned,
+        "clean_s": clean_s, "chaos_s": chaos_s,
+        "clean_healthy_per_s": clean_tput,
+        "chaos_healthy_per_s": chaos_tput,
+        "healthy_throughput_ratio": ratio,
+        "dead_letters": n_poisoned,
+        "max_abs_eval_error_healthy": healthy_err,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8,
@@ -108,17 +210,31 @@ def main() -> None:
     ap.add_argument("--band-width", type=int, default=4)
     ap.add_argument("--max-restarts", type=int, default=200)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--chaos", action="store_true",
+                    help="additionally run the fault-injected bursty "
+                         "trace (healthy-throughput gate)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="only the chaos trace (the nightly chaos lane); "
+                         "does not rewrite the artifact's clean buckets")
     ap.add_argument("--outdir", default="artifacts")
     args = ap.parse_args()
 
-    buckets = [
-        ("md", 48, "TD"),
-        ("md", 48, "KE"),
-        ("dft", 64, "TD"),
-    ]
-    recs = [bench_bucket(kind, n, args.s, variant, args.batch,
-                         args.band_width, args.max_restarts, args.repeats)
-            for kind, n, variant in buckets]
+    recs = []
+    if not args.chaos_only:
+        buckets = [
+            ("md", 48, "TD"),
+            ("md", 48, "KE"),
+            ("dft", 64, "TD"),
+        ]
+        recs = [bench_bucket(kind, n, args.s, variant, args.batch,
+                             args.band_width, args.max_restarts,
+                             args.repeats)
+                for kind, n, variant in buckets]
+
+    chaos_rec = None
+    if args.chaos or args.chaos_only:
+        chaos_rec = bench_chaos(args.s, args.batch, args.band_width,
+                                args.max_restarts, args.repeats)
 
     print("name,us_per_call,derived")
     for r in recs:
@@ -126,19 +242,37 @@ def main() -> None:
               f"seq={r['sequential_problems_per_s']:.1f}/s;"
               f"engine={r['engine_problems_per_s']:.1f}/s;"
               f"speedup={r['speedup']:.2f}x")
+    if chaos_rec:
+        print(f"bench_eigenserve_{chaos_rec['bucket']},"
+              f"{chaos_rec['chaos_s'] * 1e6:.1f},"
+              f"clean={chaos_rec['clean_healthy_per_s']:.1f}/s;"
+              f"chaos={chaos_rec['chaos_healthy_per_s']:.1f}/s;"
+              f"ratio={chaos_rec['healthy_throughput_ratio']:.2f}")
 
-    payload = {
-        "batch": args.batch,
-        "buckets": recs,
-        "any_bucket_faster": any(r["speedup"] > 1.0 for r in recs),
-    }
     os.makedirs(args.outdir, exist_ok=True)
     out = os.path.join(args.outdir, "BENCH_eigenserve.json")
+    if args.chaos_only:
+        # nightly chaos lane: fold the chaos record into the existing
+        # artifact without re-benching the clean buckets
+        payload = {}
+        if os.path.exists(out):
+            with open(out) as f:
+                payload = json.load(f)
+        payload["chaos"] = chaos_rec
+    else:
+        payload = {
+            "batch": args.batch,
+            "buckets": recs,
+            "any_bucket_faster": any(r["speedup"] > 1.0 for r in recs),
+        }
+        if chaos_rec:
+            payload["chaos"] = chaos_rec
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {out}")
-    assert payload["any_bucket_faster"], \
-        "batched engine did not beat the sequential loop on any bucket"
+    if not args.chaos_only:
+        assert payload["any_bucket_faster"], \
+            "batched engine did not beat the sequential loop on any bucket"
 
 
 if __name__ == "__main__":

@@ -44,6 +44,13 @@ KE_HLO_ALL_GATHER_MAX = 1
 #: all_gathers in the lowered tt3_program text: the lam gather + the
 #: per-round Z gather (fori body appears once)
 TT3_HLO_ALL_GATHER_MAX = 2
+#: host dispatches the resilience health sentinels may ADD to any fused
+#: program — pinned to 0: every stage-boundary ``is_finite`` verdict is
+#: traced into an existing program (``resilience.health``), so the
+#: dispatch budgets below hold UNCHANGED with sentinels active. The
+#: auditor enforces both sides: ``min_isfinite_sites`` proves the
+#: sentinel is present, this constant proves it is free.
+SENTINEL_EXTRA_DISPATCHES = 0
 
 
 #: dtypes the mixed-precision (fp32 compute) pipelines may mention on top
@@ -256,6 +263,23 @@ def _build_tt3(spec: AuditSpec, mesh):
 # off-TPU (interpret mode) so the lowered jaxpr contains the real
 # pallas_call with its GridMapping for the kernel lint
 
+def _build_stage_sentinels(spec: AuditSpec):
+    """The standalone fused stage programs of ``gsyeig``: Cholesky + its
+    health verdict (GS1) and the TRSM congruence + its finiteness verdict
+    (GS2) each lower to ONE program whose sentinel is part of the trace."""
+    from repro.core.gsyeig import _jit_chol, _jit_gs2_trsm
+    n = spec.n
+    B = _sds(n, n, dtype=spec.dtype)
+    A = _sds(n, n, dtype=spec.dtype)
+    U = _sds(n, n, dtype=spec.dtype)
+    return [
+        ProgramSpec(name="gs1_chol_sentinel", fn=_jit_chol, args=(B,),
+                    with_hlo=False),
+        ProgramSpec(name="gs2_trsm_sentinel", fn=_jit_gs2_trsm,
+                    args=(A, U), with_hlo=False),
+    ]
+
+
 def _build_kernel_gemm(spec: AuditSpec):
     from repro.kernels.gemm.ops import gemm
     A = _sds(96, 64, dtype=spec.dtype)
@@ -401,7 +425,10 @@ def register_all(spec: Optional[AuditSpec] = None,
         build=partial(_build_lanczos_solve_jit, spec),
         contract=BudgetContract(
             max_dispatches=1, exact_collectives=0, max_dynamic_whiles=1,
-            notes="fully jitted Krylov driver: ONE dynamic restart while"),
+            min_isfinite_sites=1,
+            sentinel_extra_dispatches=SENTINEL_EXTRA_DISPATCHES,
+            notes="fully jitted Krylov driver: ONE dynamic restart while; "
+                  "the restart-health sentinel is fused into it"),
         tags=("core", "quick")))
 
     for variant in ("TD", "TT", "KE", "KI"):
@@ -411,7 +438,10 @@ def register_all(spec: Optional[AuditSpec] = None,
             contract=BudgetContract(
                 max_dispatches=1, exact_collectives=0,
                 max_dynamic_whiles=0 if variant in ("TD", "TT") else 1,
-                notes="one vmapped program per shape bucket"),
+                min_isfinite_sites=1,
+                sentinel_extra_dispatches=SENTINEL_EXTRA_DISPATCHES,
+                notes="one vmapped program per shape bucket (per-pencil "
+                      "output sentinel fused in)"),
             tags=("serve", "quick")))
 
     # mixed/fast precision policies: the same bucketed pipelines with the
@@ -431,6 +461,8 @@ def register_all(spec: Optional[AuditSpec] = None,
             contract=BudgetContract(
                 max_dispatches=1, exact_collectives=0,
                 max_dynamic_whiles=0 if variant in ("TD", "TT") else 1,
+                min_isfinite_sites=1,
+                sentinel_extra_dispatches=SENTINEL_EXTRA_DISPATCHES,
                 allowed_dtypes=precision_allowed[precision],
                 declared_downcasts=declared_downcasts(precision),
                 notes=f"{precision} pipeline: declared GEMM-stage "
@@ -460,8 +492,11 @@ def register_all(spec: Optional[AuditSpec] = None,
             exact_collectives=KE_COLLECTIVES_PER_BLOCK_STEP
                 * (spec.m // spec.p),
             max_dynamic_whiles=0,
+            min_isfinite_sites=1,
+            sentinel_extra_dispatches=SENTINEL_EXTRA_DISPATCHES,
             notes="ONE dispatch per thick restart; psum + all_gather per "
-                  "p-column block step of the fused matvec"),
+                  "p-column block step of the fused matvec; the restart "
+                  "health verdict rides in the same program"),
         needs_mesh=True, tags=("dist", "quick")))
 
     register(AuditEntry(
@@ -487,6 +522,18 @@ def register_all(spec: Optional[AuditSpec] = None,
             notes="spectrum-partitioned TT3: 1 lam all_gather + one Z "
                   "all_gather per inverse-iteration round"),
         needs_mesh=True, tags=("dist", "quick")))
+
+    register(AuditEntry(
+        name="resilience/stage_sentinels",
+        build=partial(_build_stage_sentinels, spec),
+        contract=BudgetContract(
+            max_dispatches=2, exact_collectives=0, max_dynamic_whiles=0,
+            min_isfinite_sites=2,
+            sentinel_extra_dispatches=SENTINEL_EXTRA_DISPATCHES,
+            notes="GS1 Cholesky + GS2 TRSM with their health verdicts "
+                  "fused in: the stage programs gsyeig.solve dispatches "
+                  "anyway, so the sentinels are dispatch-free"),
+        tags=("resilience", "quick")))
 
     kernel_builders = {
         "gemm": _build_kernel_gemm, "symv": _build_kernel_symv,
@@ -516,7 +563,8 @@ __all__ = [
     "TT1_FUSED_MAX_DISPATCHES", "TT1_COLLECTIVES_PER_PANEL",
     "TT1_STEPWISE_DISPATCHES_PER_PANEL", "KE_COLLECTIVES_PER_BLOCK_STEP",
     "KE_HLO_ALL_REDUCE_MAX", "KE_HLO_ALL_GATHER_MAX",
-    "TT3_HLO_ALL_GATHER_MAX", "ke_dispatch_budget",
+    "TT3_HLO_ALL_GATHER_MAX", "SENTINEL_EXTRA_DISPATCHES",
+    "ke_dispatch_budget",
     "lanczos_block_dispatch_budget", "lanczos_single_dispatch_budget",
     "tt3_dist_collectives",
 ]

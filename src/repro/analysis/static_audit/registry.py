@@ -65,6 +65,15 @@ class BudgetContract:
     forbid_callbacks: bool = True
     #: require at least this many pallas_call launches (kernel entries)
     min_pallas_calls: int = 0
+    #: require at least this many ``is_finite`` sites across the lowered
+    #: programs — proof that the resilience health sentinels are FUSED
+    #: into the program (a sentinel that fell out of the trace would
+    #: silently stop guarding)
+    min_isfinite_sites: int = 0
+    #: extra host dispatches the sentinels are permitted to add on top of
+    #: ``max_dispatches``. Pinned to 0 repo-wide: the health verdicts ride
+    #: inside the existing fused programs, never as separate launches.
+    sentinel_extra_dispatches: int = 0
     notes: str = ""
 
     def as_json_dict(self) -> dict:
@@ -94,6 +103,7 @@ class EntryReport:
     max_collectives_per_step: int
     violations: List[str]
     skipped: bool = False
+    isfinite_sites: int = 0
 
     @property
     def ok(self) -> bool:
@@ -103,6 +113,7 @@ class EntryReport:
         return {"name": self.name, "ok": self.ok, "skipped": self.skipped,
                 "violations": self.violations,
                 "dispatches": self.dispatches,
+                "isfinite_sites": self.isfinite_sites,
                 "total_collectives": self.total_collectives,
                 "max_collectives_per_step": self.max_collectives_per_step,
                 "contract": self.contract.as_json_dict(),
@@ -143,15 +154,27 @@ def clear_registry() -> None:
 
 def _check_contract(c: BudgetContract, profiles: List[ProgramProfile],
                     specs: Sequence[ProgramSpec]) -> Tuple[int, int, int,
-                                                           List[str]]:
+                                                           int, List[str]]:
     viol: List[str] = []
     dispatches = sum(s.host_multiplicity for s in specs)
     total_coll = sum(p.total_collectives() * s.host_multiplicity
                      for p, s in zip(profiles, specs))
     per_step = max((p.max_collectives_per_loop_trip() for p in profiles),
                    default=0)
-    if c.max_dispatches is not None and dispatches > c.max_dispatches:
-        viol.append(f"dispatches {dispatches} > budget {c.max_dispatches}")
+    isfinite_sites = sum(p.primitive_counts.get("is_finite", 0)
+                         for p in profiles)
+    if c.max_dispatches is not None:
+        # the dispatch ceiling INCLUDES the sentinel allowance (pinned to
+        # 0 repo-wide): health verdicts must not buy extra launches
+        budget = c.max_dispatches + c.sentinel_extra_dispatches
+        if dispatches > budget:
+            viol.append(f"dispatches {dispatches} > budget {budget} "
+                        f"(base {c.max_dispatches} + sentinel allowance "
+                        f"{c.sentinel_extra_dispatches})")
+    if isfinite_sites < c.min_isfinite_sites:
+        viol.append(f"{isfinite_sites} fused is_finite site(s) < required "
+                    f"{c.min_isfinite_sites} (health sentinel missing "
+                    "from the lowered program)")
     if (c.max_collectives_per_step is not None
             and per_step > c.max_collectives_per_step):
         viol.append(f"collectives per loop step {per_step} > budget "
@@ -188,7 +211,7 @@ def _check_contract(c: BudgetContract, profiles: List[ProgramProfile],
     if n_pallas < c.min_pallas_calls:
         viol.append(f"{n_pallas} pallas_call(s) < required "
                     f"{c.min_pallas_calls}")
-    return dispatches, total_coll, per_step, viol
+    return dispatches, total_coll, per_step, isfinite_sites, viol
 
 
 def check_entry(entry: AuditEntry) -> EntryReport:
@@ -196,12 +219,13 @@ def check_entry(entry: AuditEntry) -> EntryReport:
     specs = list(entry.build())
     profiles = [profile_fn(s.fn, *s.args, name=s.name,
                            with_hlo=s.with_hlo, **s.kwargs) for s in specs]
-    dispatches, total, per_step, viol = _check_contract(
+    dispatches, total, per_step, isf, viol = _check_contract(
         entry.contract, profiles, specs)
     return EntryReport(name=entry.name, contract=entry.contract,
                        profiles=profiles, dispatches=dispatches,
                        total_collectives=total,
-                       max_collectives_per_step=per_step, violations=viol)
+                       max_collectives_per_step=per_step, violations=viol,
+                       isfinite_sites=isf)
 
 
 def check_all(tags: Optional[Sequence[str]] = None,

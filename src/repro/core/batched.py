@@ -46,12 +46,23 @@ class BatchedSolveResult(NamedTuple):
     evals: jax.Array       # (batch, s) ascending per pencil
     X: jax.Array           # (batch, n, s) B-orthonormal eigenvectors
     converged: jax.Array   # (batch,) bool (always True for TD/TT)
+    healthy: jax.Array     # (batch,) bool fused finite-sentinel verdict
     info: Dict[str, Any]
 
 
 # --------------------------------------------------------------------------
-# per-pencil pipelines (vmapped below); signature: (A, B, key) -> (lam, X, ok)
+# per-pencil pipelines (vmapped below);
+# signature: (A, B, key) -> (lam, X, ok, healthy)
 # --------------------------------------------------------------------------
+
+
+def _output_sentinel(lam, X):
+    """Fused per-pencil health sentinel: two reductions folded into the
+    ONE vmapped bucket program — zero extra dispatches (the static
+    auditor pins ``max_dispatches`` of every ``solve_batched_*`` entry).
+    A non-SPD B (NaN Cholesky) or a demoted-stage overflow propagates
+    into (lam, X), so finiteness of the outputs covers every stage."""
+    return jnp.isfinite(lam).all() & jnp.isfinite(X).all()
 
 def _standard_form(A, B):
     U = cholesky_upper(B)
@@ -117,7 +128,7 @@ def _pipeline_direct(A, B, key, *, s: int, variant: str, which: str,
     if invert:
         lam, X = _finalize_invert(lam, X, B_orig)
     lam, X = _refine_fixed(lam, X, A0, B0, which0, refine_steps, key)
-    return lam, X, jnp.asarray(True)
+    return lam, X, jnp.asarray(True), _output_sentinel(lam, X)
 
 
 def _pipeline_krylov(A, B, key, *, s: int, variant: str, which: str,
@@ -133,17 +144,16 @@ def _pipeline_krylov(A, B, key, *, s: int, variant: str, which: str,
     op = ExplicitC(C) if variant == "KE" else ImplicitC(A, U)
     arp_which = "SA" if which == "smallest" else "LA"
     v0 = jax.random.normal(key, (A.shape[0], p), A.dtype)
-    lam, Y, _, converged = lanczos_solve_jit(op, v0, s, m, which=arp_which,
-                                             max_restarts=max_restarts, p=p,
-                                             filter_degree=filter_degree,
-                                             compute_dtype=cdtype_name)
+    lam, Y, _, converged, healthy = lanczos_solve_jit(
+        op, v0, s, m, which=arp_which, max_restarts=max_restarts, p=p,
+        filter_degree=filter_degree, compute_dtype=cdtype_name)
     order = jnp.argsort(lam)
     lam, Y = lam[order], Y[:, order]
     X = back_transform_generalized(U, Y)
     if invert:
         lam, X = _finalize_invert(lam, X, B_orig)
     lam, X = _refine_fixed(lam, X, A0, B0, which0, refine_steps, key)
-    return lam, X, converged
+    return lam, X, converged, healthy & _output_sentinel(lam, X)
 
 
 # --------------------------------------------------------------------------
@@ -302,23 +312,30 @@ def solve_batched(
         compile_s = time.perf_counter() - t0
         _EXEC_CACHE[exec_key] = compiled
     t0 = time.perf_counter()
-    lam, X, converged = compiled(A, B, keys)
+    lam, X, converged, healthy = compiled(A, B, keys)
     jax.block_until_ready(lam)
     wall = time.perf_counter() - t0
-    n_unconverged = int(jax.device_get(jnp.sum(~converged)))
+    n_unconverged, n_unhealthy = (int(x) for x in jax.device_get(
+        (jnp.sum(~converged), jnp.sum(~healthy))))
     info = {"variant": variant, "n": int(n), "s": int(s),
             "batch": int(batch), "which": which, "invert": bool(invert),
             "precision": precision, "refine_steps": int(ckey[-1]),
             "cache_key": ckey, "cache_hit": cache_hit,
             "compile_s": compile_s, "wall_s": wall,
             "pencils_per_s": batch / max(wall, 1e-12),
-            "n_unconverged": n_unconverged}
+            "n_unconverged": n_unconverged, "n_unhealthy": n_unhealthy}
     if n_unconverged:
         info["warnings"] = [
             f"{variant}: {n_unconverged}/{batch} pencils retired at the "
             f"restart budget (max_restarts={max_restarts}) without "
             f"converging; their residuals may exceed tolerance"]
-    return BatchedSolveResult(evals=lam, X=X, converged=converged, info=info)
+    if n_unhealthy:
+        info.setdefault("warnings", []).append(
+            f"{variant}: {n_unhealthy}/{batch} pencils produced NON-FINITE "
+            f"eigenpairs (non-SPD B or overflow in a demoted stage); see "
+            f"result.healthy for the per-pencil verdicts")
+    return BatchedSolveResult(evals=lam, X=X, converged=converged,
+                              healthy=healthy, info=info)
 
 
 __all__ = ["solve_batched", "BatchedSolveResult", "BATCHED_VARIANTS",

@@ -19,6 +19,18 @@ def cholesky_upper(B: jax.Array) -> jax.Array:
     return L.T
 
 
+def diag_shifted(B: jax.Array, tau: float) -> jax.Array:
+    """B + tau * max|diag B| * I — the GS1 breakdown-recovery shift.
+
+    Relative to the diagonal scale so the same rung ladder (see
+    ``resilience.recovery.cholesky_shift_taus``) serves pencils of any
+    magnitude; the caller reports the shift it used and refinement still
+    targets the original pencil."""
+    n = B.shape[0]
+    scale = jnp.max(jnp.abs(jnp.diagonal(B)))
+    return B + (tau * scale) * jnp.eye(n, dtype=B.dtype)
+
+
 def cholesky_blocked(B: jax.Array, block: int = 256) -> jax.Array:
     """Right-looking blocked Cholesky (upper factor), B = U^T U.
 

@@ -24,8 +24,14 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.resilience import faults
+from repro.resilience.health import (array_finite, chol_health, host_finite,
+                                     verdict_from_stages)
+from repro.resilience.recovery import (SolverError, cholesky_shift_taus,
+                                       rung, validate_on_failure)
+
 from .back_transform import back_transform_generalized
-from .cholesky import cholesky_blocked, cholesky_upper
+from .cholesky import cholesky_blocked, cholesky_upper, diag_shifted
 from .lanczos import default_subspace, lanczos_solve
 from .operators import ExplicitC, ImplicitC
 from .precision import compute_dtype, ensure_strong, validate_precision
@@ -57,11 +63,53 @@ def _timed(times: Dict[str, float], key: str):
     return wrap
 
 
-# module-level jitted stages (cached across driver calls with equal shapes)
-_jit_chol = jax.jit(cholesky_upper)
-_jit_chol_blocked = jax.jit(cholesky_blocked, static_argnames=("block",))
-_jit_gs2_trsm = jax.jit(to_standard_two_trsm)
-_jit_gs2_sygst = jax.jit(to_standard_sygst, static_argnames=("block",))
+# module-level jitted stages (cached across driver calls with equal shapes).
+# GS1/GS2 carry FUSED health sentinels: the isfinite/pivot reductions are
+# part of the same program as the factorization they guard, so stage
+# verdicts cost zero extra dispatches (the auditor's
+# ``resilience/stage_sentinels`` entry pins this)
+def _chol_fused(B):
+    U = cholesky_upper(B)
+    ok, min_diag = chol_health(U)
+    return U, ok, min_diag
+
+
+def _chol_blocked_fused(B, block):
+    U = cholesky_blocked(B, block)
+    ok, min_diag = chol_health(U)
+    return U, ok, min_diag
+
+
+def _chol_ladder_fused(B, taus):
+    """Degradation ladder, rung 1, as ONE program: Cholesky every
+    diagonally-shifted candidate ``B + tau*max|diag B|*I`` in a single
+    vmapped dispatch, returning the stacked factors and per-rung health
+    flags. Rung-by-rung retries would cost a dispatch plus a host sync
+    per tau; fusing the ladder makes even a fully exhausted ladder cost
+    one dispatch and one fetch, which is what keeps failed lanes from
+    sinking healthy serving throughput (the chaos bench gates this)."""
+    def one(tau):
+        U = cholesky_upper(diag_shifted(B, tau))
+        ok, _ = chol_health(U)
+        return U, ok
+    return jax.vmap(one)(taus)
+
+
+def _gs2_trsm_fused(A, U):
+    C = to_standard_two_trsm(A, U)
+    return C, array_finite(C)
+
+
+def _gs2_sygst_fused(A, U, block):
+    C = to_standard_sygst(A, U, block=block)
+    return C, array_finite(C)
+
+
+_jit_chol = jax.jit(_chol_fused)
+_jit_chol_blocked = jax.jit(_chol_blocked_fused, static_argnames=("block",))
+_jit_chol_ladder = jax.jit(_chol_ladder_fused)
+_jit_gs2_trsm = jax.jit(_gs2_trsm_fused)
+_jit_gs2_sygst = jax.jit(_gs2_sygst_fused, static_argnames=("block",))
 _jit_td1 = jax.jit(tridiagonalize)
 _jit_td1_blocked = jax.jit(tridiagonalize_blocked, static_argnames=("panel",))
 _jit_td3 = jax.jit(apply_q)
@@ -72,7 +120,7 @@ _jit_tt4 = jax.jit(lambda chase, Q1, Z, w: Q1 @ apply_q2(chase, Z, w),
 _jit_bt1 = jax.jit(back_transform_generalized)
 
 
-def solve(
+def _solve_once(
     A: jax.Array,
     B: jax.Array,
     s: int,
@@ -98,8 +146,16 @@ def solve(
     refine: bool | None = None,
     refine_tol: float = REFINE_TOL,
     refine_max_steps: int = 60,
+    on_failure: str = "warn",
+    recovery: list | None = None,
 ) -> GSyEigResult:
-    """`mesh=` (a jax.sharding.Mesh with a 'model' axis plus data axes)
+    """One attempt of the pipeline (the public ``solve`` wraps this with
+    the degradation ladder). Stage health verdicts land in
+    ``info['_stage_health']`` for the wrapper to fold into
+    ``info['health']``; a breakdown or non-finite stage raises a
+    diagnosed ``SolverError`` unless ``on_failure == 'ignore'``.
+
+    `mesh=` (a jax.sharding.Mesh with a 'model' axis plus data axes)
     dispatches the KE and TT variants onto the distributed pipelines in
     ``repro.dist.eigensolver`` — same driver logic, every stage routed
     through ``repro.dist.sharded_la`` (KE: every matvec a ``dist_symv``;
@@ -135,6 +191,10 @@ def solve(
     ``result.info['refinement']``, the wall time in
     ``stage_times['RF']``."""
     validate_precision(precision)
+    validate_on_failure(on_failure)
+    if recovery is None:
+        recovery = []
+    stage_health: Dict[str, bool] = {}
     cdtype = compute_dtype(precision)
     demoted = precision != "fp64"
     if refine is None:
@@ -207,6 +267,16 @@ def solve(
                 return_info=True, precision=precision)
         times.update(dinfo.pop("stage_times"))
         info.update(dinfo)
+        stage_health[f"{variant}_dist"] = bool(dinfo.get("healthy", True))
+        info["_stage_health"] = stage_health
+        if not stage_health[f"{variant}_dist"] and on_failure != "ignore":
+            raise SolverError(
+                f"distributed {variant} produced a non-finite restart "
+                f"state", stage=f"{variant}_dist", reason="nonfinite_stage",
+                hint="probable GS1 breakdown (non-SPD B) or overflow in a "
+                     "demoted stage; retry with precision='fp64' or check "
+                     "the pencil", recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
         if not info.get("converged", True):
             info.setdefault("warnings", []).append(
                 f"{variant} retired UNCONVERGED after "
@@ -217,18 +287,74 @@ def solve(
                          times, info, refine_cfg)
 
     # ---- GS1: B = U^T U --------------------------------------------------
-    if gs1 == "blocked":
-        U = _timed(times, "GS1")(_jit_chol_blocked, B, block=block)
-    else:
-        U = _timed(times, "GS1")(_jit_chol, B)
+    # the factor's health sentinel is fused into the same program (zero
+    # extra dispatches); fetching the scalar verdict is a transfer the
+    # _timed block_until_ready already paid for
+    Bg = faults.poison_stage("GS1", B)
+    chol_stage = (partial(_jit_chol_blocked, block=block)
+                  if gs1 == "blocked" else _jit_chol)
+    U, gs1_ok, _ = _timed(times, "GS1")(chol_stage, Bg)
+    gs1_ok = bool(jax.device_get(gs1_ok))
+    if not gs1_ok and on_failure != "ignore":
+        if not host_finite(Bg):
+            stage_health["GS1"] = False
+            raise SolverError(
+                "non-finite B entering GS1 (Cholesky)", stage="GS1",
+                reason="nonfinite_stage",
+                hint="the input pencil itself is corrupted; transient "
+                     "corruption is retryable under on_failure='recover'",
+                recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
+        # degradation ladder, rung 1: relative diagonal-shift retries —
+        # roundoff-level indefiniteness is recoverable, a truly non-SPD
+        # B exhausts the ladder into a diagnosed SolverError. All rungs
+        # run as ONE vmapped dispatch with a single fetch of the
+        # per-rung verdicts, so an exhausted ladder stays cheap
+        taus = cholesky_shift_taus()
+        Us, oks = _timed(times, "GS1")(
+            _jit_chol_ladder, Bg, jnp.asarray(taus, dtype=Bg.dtype))
+        oks = [bool(x) for x in jax.device_get(oks)]
+        for i, tau in enumerate(taus):
+            if oks[i]:
+                recovery.append(rung("cholesky_shift", "GS1", "recovered",
+                                     tau=float(tau)))
+                info["gs1_shift"] = float(tau)
+                U = Us[i]
+                gs1_ok = True
+                break
+            recovery.append(rung("cholesky_shift", "GS1", "failed",
+                                 tau=float(tau)))
+        if not gs1_ok:
+            stage_health["GS1"] = False
+            raise SolverError(
+                "GS1 Cholesky breakdown: B is not SPD (all diagonal-shift "
+                "rungs failed)", stage="GS1", reason="cholesky_breakdown",
+                hint="check the B operand — the generalized problem "
+                     "requires B symmetric positive definite; shifts up to "
+                     f"tau={cholesky_shift_taus()[-1]:g}*max|diag B| did "
+                     "not rescue it", recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
+    stage_health["GS1"] = gs1_ok
 
     # ---- GS2: C = U^{-T} A U^{-1} (not for KI) ---------------------------
     C = None
     if variant in ("TD", "TT", "KE"):
+        Ag = faults.poison_stage("GS2", A)
         if gs2 == "sygst":
-            C = _timed(times, "GS2")(_jit_gs2_sygst, A, U, block=block)
+            C, gs2_ok = _timed(times, "GS2")(_jit_gs2_sygst, Ag, U,
+                                             block=block)
         else:
-            C = _timed(times, "GS2")(_jit_gs2_trsm, A, U)
+            C, gs2_ok = _timed(times, "GS2")(_jit_gs2_trsm, Ag, U)
+        gs2_ok = bool(jax.device_get(gs2_ok))
+        stage_health["GS2"] = gs2_ok
+        if not gs2_ok and on_failure != "ignore":
+            raise SolverError(
+                "non-finite standard-form C after GS2", stage="GS2",
+                reason="nonfinite_stage",
+                hint="non-finite A, or U from a near-breakdown GS1; "
+                     "transient corruption is retryable under "
+                     "on_failure='recover'", recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
 
     want_small = which == "smallest"
     if variant in ("TD", "TT"):
@@ -237,10 +363,23 @@ def solve(
         # tridiagonal eigensolve (TD2/TT3) is promoted back to fp64
         Cw = C if not demoted else C.astype(cdtype)
         if variant == "TD":
+            Cw = faults.poison_stage("TD1", Cw)
             if td1 == "blocked":
                 res = _timed(times, "TD1")(_jit_td1_blocked, Cw, panel=32)
             else:
                 res = _timed(times, "TD1")(_jit_td1, Cw)
+            # host-side sentinel on the small (n,)/(n-1,) tridiagonal
+            # outputs the TD2 stage fetches anyway — zero dispatches (a
+            # wrapping jit would break the composite stage's own timing)
+            stage_health["TD1"] = host_finite(res.d, res.e)
+            if not stage_health["TD1"] and on_failure != "ignore":
+                raise SolverError(
+                    "non-finite tridiagonal after TD1", stage="TD1",
+                    reason="nonfinite_stage",
+                    hint="corrupted C entering the reflector sweep "
+                         "(demoted-stage overflow or upstream NaN)",
+                    recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
             lam, Z = _timed(times, "TD2")(
                 eigh_tridiag_selected, res.d.astype(jnp.float64),
                 res.e.astype(jnp.float64), ks, key)
@@ -249,13 +388,32 @@ def solve(
             # TT1 split: the sweep is ONE compiled program (reduce_to_band
             # is internally jitted); record the ladder choice + dispatch
             # count so the stage timing is attributable
+            Cw = faults.poison_stage("TT1", Cw)
             n_chunks = default_n_chunks(n, band_width)
             d0 = _sbr.dispatch_count()
             band = _timed(times, "TT1")(reduce_to_band, Cw, w=band_width,
                                         n_chunks=n_chunks)
             info["tt1"] = {"n_chunks": int(n_chunks),
                            "dispatches": int(_sbr.dispatch_count() - d0)}
+            # host sentinel on the (w+1, n) band the chase consumes
+            stage_health["TT1"] = host_finite(band.Wb)
+            if not stage_health["TT1"] and on_failure != "ignore":
+                raise SolverError(
+                    "non-finite band matrix after the TT1 sweep",
+                    stage="TT1", reason="nonfinite_stage",
+                    hint="corrupted C entering the panel sweep "
+                         "(demoted-stage overflow or upstream NaN)",
+                    recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
             chase = _timed(times, "TT2")(band_chase, band.Wb, band_width)
+            stage_health["TT2"] = host_finite(chase.d, chase.e)
+            if not stage_health["TT2"] and on_failure != "ignore":
+                raise SolverError(
+                    "non-finite tridiagonal after the TT2 chase",
+                    stage="TT2", reason="nonfinite_stage",
+                    hint="the rotation wavefront hit non-finite band "
+                         "entries", recovery=recovery,
+                    health=verdict_from_stages(stage_health).as_json_dict())
             lam, Z = _timed(times, "TT3")(
                 eigh_tridiag_selected, chase.d.astype(jnp.float64),
                 chase.e.astype(jnp.float64), ks, key)
@@ -265,15 +423,16 @@ def solve(
     else:
         arp_which = "SA" if want_small else "LA"
         if variant == "KE":
-            op = ExplicitC(C)
+            op = ExplicitC(faults.poison_stage("KE_iter", C))
             prefix = "KE"
         else:
-            op = ImplicitC(A, U)
+            op = ImplicitC(faults.poison_stage("KI_iter", A), U)
             prefix = "KI"
         if m is None:
             m = default_subspace(s, n, p)
         elif p > 1 and m % p:
             m = -(-m // p) * p          # block-align a user-supplied m
+        tol, max_restarts = faults.force_nonconverge(tol, max_restarts)
         t0 = time.perf_counter()
         lres = lanczos_solve(op, s, which=arp_which, m=m, tol=tol,
                              max_restarts=max_restarts, key=key,
@@ -288,6 +447,17 @@ def solve(
                     converged=bool(lres.converged),
                     resid_bounds=[float(r) for r in
                                   jnp.asarray(lres.resid_bounds)])
+        stage_health[f"{prefix}_iter"] = bool(lres.healthy)
+        if not lres.healthy and on_failure != "ignore":
+            raise SolverError(
+                f"{prefix} restart state went non-finite after "
+                f"{int(lres.n_restart)} restarts", stage=f"{prefix}_iter",
+                reason="nonfinite_stage",
+                hint="NaN/inf in the Lanczos basis — corrupted operator "
+                     "or demoted-matvec overflow; transient corruption is "
+                     "retryable under on_failure='recover'",
+                recovery=recovery,
+                health=verdict_from_stages(stage_health).as_json_dict())
         if not lres.converged:
             info.setdefault("warnings", []).append(
                 f"{prefix} retired UNCONVERGED after {int(lres.n_restart)} "
@@ -301,6 +471,7 @@ def solve(
     # ---- BT1: X = U^{-1} Y ----------------------------------------------
     X = _timed(times, "BT1")(_jit_bt1, U, Y)
 
+    info["_stage_health"] = stage_health
     return _finalize(lam, X, A_orig, B_orig, which_orig, invert, times,
                      info, refine_cfg)
 
@@ -330,3 +501,147 @@ def _finalize(lam, X, A_orig, B_orig, which_orig: str, invert: bool,
 
     times["Tot."] = float(sum(v for k, v in times.items() if k != "Tot."))
     return GSyEigResult(evals=lam, X=X, stage_times=times, info=info)
+
+
+def solve(
+    A: jax.Array,
+    B: jax.Array,
+    s: int,
+    variant: str = "TD",
+    which: str = "smallest",
+    invert: bool = False,
+    gs2: str = "trsm",
+    gs1: str = "fused",
+    td1: str = "unblocked",
+    band_width: int = 16,
+    block: int = 256,
+    m: int | None = None,
+    tol: float = 0.0,
+    max_restarts: int = 500,
+    use_kernel: bool = False,
+    key: jax.Array | None = None,
+    mesh=None,
+    clustered: bool = False,
+    machine=None,
+    krylov_block: int | None = None,
+    filter: int | None = None,        # noqa: A002 — the paper-facing name
+    precision: str = "fp64",
+    refine: bool | None = None,
+    refine_tol: float = REFINE_TOL,
+    refine_max_steps: int = 60,
+    on_failure: str = "warn",
+    max_retries: int = 2,
+) -> GSyEigResult:
+    """GSYEIG with failure containment: ``_solve_once`` (see its
+    docstring for the solver knobs) wrapped in the degradation ladder of
+    ``repro.resilience.recovery``.
+
+    ``on_failure`` selects the policy:
+
+      ``'warn'`` (default) — stage-boundary health sentinels diagnose
+        failures: a GS1 breakdown tries the diagonal-shift rungs, any
+        remaining non-finite stage or output raises ``SolverError``
+        (never silent NaN eigenpairs); unconverged Krylov solves retire
+        with a warning, exactly as before.
+      ``'recover'`` — additionally climbs the ladder: transient
+        non-finite failures are retried up to ``max_retries`` times
+        (fresh key); an unconverged KE/KI escalates the restart budget
+        and Chebyshev filter, then falls back to the direct TT variant;
+        a mixed/fast refinement stalling above tolerance reruns at fp64.
+      ``'ignore'`` — the pre-resilience behavior (no raises, no
+        retries); the health verdict is still recorded.
+
+    Every solve carries ``info['health']`` (per-stage verdicts, JSON-
+    clean) and ``info['recovery']`` (the rungs taken, possibly empty).
+    """
+    validate_on_failure(on_failure)
+    recovery: list = []
+    kw: Dict[str, Any] = dict(
+        variant=variant, which=which, invert=invert, gs2=gs2, gs1=gs1,
+        td1=td1, band_width=band_width, block=block, m=m, tol=tol,
+        max_restarts=max_restarts, use_kernel=use_kernel, key=key,
+        mesh=mesh, clustered=clustered, machine=machine,
+        krylov_block=krylov_block, filter=filter, precision=precision,
+        refine=refine, refine_tol=refine_tol,
+        refine_max_steps=refine_max_steps)
+
+    def attempt(attempt_kw):
+        res = _solve_once(A, B, s, on_failure=on_failure,
+                          recovery=recovery, **attempt_kw)
+        stages = res.info.pop("_stage_health", {})
+        # final output sentinel: host-side on the (s,)/(n, s) results the
+        # caller fetches anyway — zero extra dispatches
+        out_ok = host_finite(res.evals, res.X)
+        stages["OUT"] = out_ok
+        res.info["health"] = verdict_from_stages(stages).as_json_dict()
+        res.info["recovery"] = recovery
+        if not out_ok and on_failure != "ignore":
+            raise SolverError(
+                "solver produced non-finite eigenpairs", stage="OUT",
+                reason="nonfinite_output",
+                hint="every stage sentinel passed but the output is "
+                     "corrupt — suspect the back-transform operands; "
+                     "transient corruption is retryable under "
+                     "on_failure='recover'", recovery=recovery,
+                health=res.info["health"])
+        return res
+
+    retries = 0
+    retry_rung = None
+    while True:
+        try:
+            res = attempt(kw)
+            break
+        except SolverError as err:
+            transient = err.diagnosis["reason"] in ("nonfinite_stage",
+                                                    "nonfinite_output")
+            if not (on_failure == "recover" and transient
+                    and retries < max_retries):
+                raise
+            retries += 1
+            retry_rung = rung("transient_retry", err.diagnosis["stage"],
+                              "attempt", attempt=retries)
+            recovery.append(retry_rung)
+            base_key = (kw["key"] if kw["key"] is not None
+                        else jax.random.PRNGKey(20120520))
+            kw = dict(kw, key=jax.random.fold_in(base_key, 1000 + retries))
+    if retry_rung is not None:
+        retry_rung["outcome"] = "recovered"
+
+    # --- ladder: unconverged Krylov -> escalate -> TT fallback -----------
+    if on_failure == "recover" and not res.info.get("converged", True):
+        resolved = res.info["variant"]
+        fd = int(res.info.get("krylov", {}).get("filter_degree", 0))
+        esc_restarts = int(max_restarts) * 4
+        esc_filter = max(16, fd)
+        r = rung("escalate_krylov", f"{resolved}_iter", "attempt",
+                 max_restarts=esc_restarts, filter_degree=esc_filter)
+        recovery.append(r)
+        res2 = attempt(dict(kw, variant=resolved,
+                            max_restarts=esc_restarts, filter=esc_filter))
+        if res2.info.get("converged", True):
+            r["outcome"] = "recovered"
+            res = res2
+        else:
+            r["outcome"] = "failed"
+            fb = rung("fallback_variant", f"{resolved}_iter", "attempt",
+                      variant="TT")
+            recovery.append(fb)
+            res = attempt(dict(kw, variant="TT"))
+            fb["outcome"] = ("recovered"
+                             if res.info.get("converged", True) else "failed")
+
+    # --- ladder: demoted refinement stalled above tol -> fp64 rerun ------
+    rinfo = res.info.get("refinement")
+    if (on_failure == "recover" and precision != "fp64" and rinfo
+            and not rinfo.get("converged", True) and rinfo.get("stalled")):
+        r = rung("escalate_precision", "RF", "attempt",
+                 from_precision=precision, to_precision="fp64")
+        recovery.append(r)
+        res = attempt(dict(kw, variant=res.info["variant"],
+                           precision="fp64", refine=True))
+        r["outcome"] = ("recovered"
+                        if res.info.get("refinement",
+                                        {}).get("converged", True)
+                        else "failed")
+    return res

@@ -53,6 +53,7 @@ class LanczosResult(NamedTuple):
     n_restart: int
     converged: bool
     resid_bounds: jax.Array  # (s,) ||B_q S[m-p:m, i]|| at exit
+    healthy: bool = True     # fused finite-sentinel verdict at exit
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +193,11 @@ def _restart_math(V: jax.Array, T: jax.Array, B_q: jax.Array,
     thresh = jnp.maximum(thresh, resid_floor_rel * jnp.max(jnp.abs(theta)))
     conv = resid[:s] <= thresh
     all_conv = jnp.all(conv)
+    # fused health sentinel (zero extra dispatches — it rides out with
+    # the verdict the host fetches anyway): a non-finite basis or T
+    # propagates into theta/resid, so this catches NaN/inf anywhere in
+    # the restart's state
+    healthy = jnp.isfinite(theta).all() & jnp.isfinite(resid).all()
     # thick restart: keep leading `keep` Ritz pairs + the residual block
     V_new_cols = V[:, :m] @ S[:, :keep]                     # (n, keep)
     V_res = V[:, m:m + p]                                   # residual block
@@ -202,7 +208,7 @@ def _restart_math(V: jax.Array, T: jax.Array, B_q: jax.Array,
     T_new = T_new.at[jnp.arange(keep), jnp.arange(keep)].set(theta[:keep])
     T_new = T_new.at[keep:keep + p, :keep].set(b[:, :keep])
     T_new = T_new.at[:keep, keep:keep + p].set(b[:, :keep].T)
-    return theta, S, resid, V_restart, T_new, all_conv
+    return theta, S, resid, V_restart, T_new, all_conv, healthy
 
 
 # dispatch accounting (observability + the regression test's hook)
@@ -357,13 +363,23 @@ def lanczos_solve(op, s: int, which: str = "SA", m: int | None = None,
     for k_restart in range(max_restarts):
         V, T, B_q = _dispatch(segment, V, T, jnp.asarray(j0))
         n_matvec += m - j0 * p
-        theta, S, resid, V_restart, T_new, all_conv = _dispatch(
+        theta, S, resid, V_restart, T_new, all_conv, healthy = _dispatch(
             _restart_math, V, T, B_q, jnp.asarray(tol_eff, dtype),
             s=s, keep=keep, m=m, p=p, which=which,
             resid_floor_rel=resid_floor_rel)
         if callback is not None:
             callback(k_restart, V, T, m)
-        if bool(jax.device_get(all_conv)):
+        # one fetch for both fused verdicts (same dispatch budget as the
+        # single-scalar convergence test this replaces)
+        conv_ok, health_ok = (bool(x) for x in
+                              jax.device_get((all_conv, healthy)))
+        if not health_ok:
+            # the restart state is poisoned: stop burning restarts on
+            # NaNs (a NaN residual never compares <= thresh) and report
+            evecs = V[:, :m] @ S[:, :s]
+            return LanczosResult(theta[:s], evecs, n_matvec, k_restart + 1,
+                                 False, resid[:s], healthy=False)
+        if conv_ok:
             evecs = V[:, :m] @ S[:, :s]
             evecs, _ = jnp.linalg.qr(evecs)
             return LanczosResult(theta[:s], evecs, n_matvec, k_restart + 1,
@@ -393,7 +409,11 @@ def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
     """lax.while_loop thick-restart block Lanczos; ONE XLA program.
 
     ``v0`` is (n,) for p == 1 or an (n, p) starting block. Returns
-    (evals (s,), evecs (n, s), n_restarts_used, converged). Shares the
+    (evals (s,), evecs (n, s), n_restarts_used, converged, healthy) —
+    ``healthy`` is the fused finite-sentinel verdict, and an unhealthy
+    state also terminates the while loop (a NaN residual never passes
+    the convergence compare, so without it the loop would spin to
+    max_restarts on a poisoned basis). Shares the
     block segment/restart core with ``lanczos_solve`` — the two drivers
     cannot drift. ``compute_dtype`` (a dtype NAME, static) demotes the
     operator application only, exactly as in ``lanczos_solve``.
@@ -427,24 +447,25 @@ def lanczos_solve_jit(op: Operator, v0: jax.Array, s: int, m: int,
     T0 = jnp.zeros((m + p, m + p), dtype)
 
     def cond(state):
-        k, _, _, _, converged, _, _ = state
-        return jnp.logical_and(k < max_restarts, jnp.logical_not(converged))
+        k, _, _, _, converged, healthy, _, _ = state
+        return (k < max_restarts) & jnp.logical_not(converged) & healthy
 
     def body(state):
-        k, V, T, j0_val, _, _, _ = state
+        k, V, T, j0_val, _, _, _, _ = state
         V, T, B_q = _segment_impl(matvec, V, T, j0_val, p)
-        theta, S, resid, V_restart, T_new, conv = _restart_math(
+        theta, S, resid, V_restart, T_new, conv, healthy = _restart_math(
             V, T, B_q, eps, s, keep, m, p, which,
             resid_floor_rel=resid_floor_rel
         )
         evecs = V[:, :m] @ S[:, :s]
         return (k + 1, V_restart, T_new, jnp.asarray(keep // p), conv,
-                theta[:s], evecs)
+                healthy, theta[:s], evecs)
 
     state0 = (jnp.asarray(0), V0, T0, jnp.asarray(0), jnp.asarray(False),
-              jnp.zeros((s,), dtype), jnp.zeros((n, s), dtype))
-    k, V, T, j0_val, converged, evals, evecs = jax.lax.while_loop(
+              jnp.asarray(True), jnp.zeros((s,), dtype),
+              jnp.zeros((n, s), dtype))
+    k, V, T, j0_val, converged, healthy, evals, evecs = jax.lax.while_loop(
         cond, body, state0
     )
     q, _ = jnp.linalg.qr(evecs)
-    return evals, q, k, converged
+    return evals, q, k, converged, healthy

@@ -185,11 +185,13 @@ def refine_eigenpairs(
     stalled = 0
     refactors = 0
     sigmas = [sigma]
+    finite = True
     while (resid_traj[-1] > tol or orth_traj[-1] > tol) and steps < max_steps:
         lam_new, X_new = _jit_refine_step(lu, piv, A, B, lam_q, X_q)
         resid, orth = _metrics(A, B, lam_new, X_new, s=s, which=which)
         r, o = float(resid), float(orth)
         if not (np.isfinite(r) and np.isfinite(o)):
+            finite = False
             break                      # degenerate input; keep the last good
         lam_q, X_q = lam_new, X_new
         resid_traj.append(r)
@@ -228,6 +230,11 @@ def refine_eigenpairs(
         "converged": bool(resid_traj[-1] <= tol and orth_traj[-1] <= tol),
         "relative_residual": resid_traj,
         "b_orthogonality": orth_traj,
+        # the degradation ladder's inputs (resilience.recovery): a stall
+        # above tolerance on a demoted pipeline escalates to fp64, a
+        # non-finite trajectory is a diagnosed health failure
+        "stalled": bool(stalled >= 3),
+        "finite": bool(finite),
     }
     return lam, X, info
 

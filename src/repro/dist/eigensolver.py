@@ -141,8 +141,8 @@ def ke_restart_program(mesh, n: int, p: int, m: int, s: int, keep: int,
     ``band_sweep_program`` gives TT1, applied to the Krylov side.
 
     Returns a jitted ``(C, V, T, j0, tol_eff) ->
-    (theta (s,), resid (s,), V', T', converged, evecs (n, s))`` callable;
-    V/T are donated. Requires n divisible by both mesh tilings
+    (theta (s,), resid (s,), V', T', converged, healthy, evecs (n, s))``
+    callable; V/T are donated. Requires n divisible by both mesh tilings
     (``solve_ke_distributed`` falls back to a replicated operator else).
     """
     rs, ax, R, cm, ok = _mesh_tiling(mesh, n)
@@ -152,16 +152,19 @@ def ke_restart_program(mesh, n: int, p: int, m: int, s: int, keep: int,
     def local(c_blk, V, T, j0, tol_eff):
         matvec = _fused_block_matvec(c_blk, ncm, ax)
         V, T, B_q = _segment_impl(matvec, V, T, j0, p)
-        theta, S, resid, V_r, T_new, conv = _restart_math(
+        # the restart math carries the fused health sentinel — the
+        # finite-state verdict rides out of the SAME program as the
+        # convergence scalar, zero extra dispatches
+        theta, S, resid, V_r, T_new, conv, healthy = _restart_math(
             V, T, B_q, tol_eff, s=s, keep=keep, m=m, p=p, which=which)
         evecs, _ = jnp.linalg.qr(V[:, :m] @ S[:, :s])
-        return theta[:s], resid[:s], V_r, T_new, conv, evecs
+        return theta[:s], resid[:s], V_r, T_new, conv, healthy, evecs
 
     prog = shard_map(local, mesh=mesh,
                      in_specs=(P(rs, "model"), P(None, None), P(None, None),
                                P(), P()),
                      out_specs=(P(None), P(None), P(None, None),
-                                P(None, None), P(), P(None, None)),
+                                P(None, None), P(), P(), P(None, None)),
                      check_rep=False)
     return jax.jit(prog, donate_argnums=(1, 2))
 
@@ -208,6 +211,11 @@ def solve_ke_distributed(
     filter_degree: int = 0,
     invert: bool = False,
     precision: str = "fp64",
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 2,
+    resume: bool = False,
+    preempt_after: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """s extremal eigenpairs of A X = B X Lambda on a 2-D device mesh.
 
@@ -227,9 +235,22 @@ def solve_ke_distributed(
     attainable residual; callers recover fp64 accuracy by refinement
     (``core.refinement`` via ``gsyeig.solve(..., precision=...)``).
 
+    Failure containment: ``checkpoint_dir`` persists the thick-restart
+    state (V, T) through ``dist/checkpoint`` every ``checkpoint_every``
+    restarts (atomic, ``checkpoint_keep`` newest retained);
+    ``resume=True`` warm-starts from the newest committed checkpoint —
+    the restart boundary is a pure function of (V, T), so a resumed
+    solve on a DIFFERENT mesh (e.g. an ``elastic.plan_remesh``-shrunken
+    one after host loss) reproduces the uninterrupted eigenvalues to
+    collective-roundoff (the preemption-drill parity test pins 1e-12).
+    ``preempt_after=k`` is the drill hook: raise
+    ``resilience.faults.SimulatedPreemption`` after the k-th restart's
+    checkpoint lands. ``info['healthy']`` carries the fused finite-state
+    sentinel of the restart program.
+
     Returns ``(evals (s,) ascending, X (n, s) B-orthonormal)``; with
     ``return_info=True`` a third dict carries per-stage wall-clock times
-    and Lanczos counters (n_matvec, n_restart, converged).
+    and Lanczos counters (n_matvec, n_restart, converged, healthy).
     """
     validate_precision(precision)
     demoted = precision != "fp64"
@@ -255,18 +276,29 @@ def solve_ke_distributed(
     rs, ax, R, cm, divisible = _mesh_tiling(mesh, n)
 
     t0 = time.perf_counter()
+    healthy = True
+    resumed_from = None
     if not divisible:
         # uneven tilings cannot shard_map; keep GS1/GS2/BT1 distributed and
         # run the (block) Lanczos stage on the replicated operator — still
-        # the shared core, just without the mesh collectives
+        # the shared core, just without the mesh collectives. Checkpointing
+        # rides the host loop's callback hook (resume is fused-path only).
+        callback = None
+        if checkpoint_dir is not None:
+            from . import checkpoint as _ckpt
+            callback = _ckpt.lanczos_callback(checkpoint_dir,
+                                              every=checkpoint_every,
+                                              keep=checkpoint_keep)
         C_rep = jax.device_put(C, NamedSharding(mesh, P(None, None)))
         res = lanczos_solve(ExplicitC(C_rep), s, which=arp_which, m=m,
                             tol=tol, max_restarts=max_restarts, key=key,
                             p=p, filter_degree=filter_degree,
+                            callback=callback,
                             compute_dtype=cdtype if demoted else None)
         lam, Y = res.evals, res.evecs
         n_matvec, n_restart = res.n_matvec, res.n_restart
         converged = res.converged
+        healthy = bool(res.healthy)
     else:
         # the Krylov operand lives 2-D-sharded: rows over data axes, cols
         # over 'model' — the layout the fused block matvec consumes
@@ -298,14 +330,51 @@ def solve_ke_distributed(
         tol_eff = jnp.asarray(tol if tol > 0.0 else eps_eff, wdtype)
         prog = ke_restart_program(mesh, n, p, m, s, keep, arp_which, dname)
         j0 = 0
+        k0 = 0
         converged = False
+        if checkpoint_dir is not None and resume:
+            from . import checkpoint as _ckpt
+            # dict keys flatten sorted, so the template's {T, V} order
+            # matches what save() wrote
+            got = _ckpt.load_latest(
+                checkpoint_dir, {"T": jnp.zeros((m + p, m + p), wdtype),
+                                 "V": jnp.zeros((n, m + p), wdtype)})
+            if got is not None:
+                step, tree, extra = got
+                V = jax.device_put(tree["V"], rep)
+                T = jax.device_put(tree["T"], rep)
+                j0 = int(extra.get("j", keep // p))
+                k0 = int(step) + 1
+                n_matvec = int(extra.get("n_matvec", n_matvec))
+                resumed_from = int(step)
         n_restart = max_restarts
-        for k_restart in range(max_restarts):
-            lam, resid, V, T, conv, Y = _dispatch(
+        for k_restart in range(k0, max_restarts):
+            lam, resid, V, T, conv, healthy_dev, Y = _dispatch(
                 prog, C, V, T, jnp.asarray(j0), tol_eff)
             n_matvec += m - j0 * p
             j0 = keep // p
-            if bool(jax.device_get(conv)):
+            # one fetch for both fused verdicts
+            conv_ok, health_ok = (bool(x) for x in
+                                  jax.device_get((conv, healthy_dev)))
+            if (checkpoint_dir is not None
+                    and k_restart % checkpoint_every == 0):
+                # the POST-restart (V, T) — the state the next segment
+                # consumes — so a resumed solve replays the identical
+                # restart arithmetic
+                from . import checkpoint as _ckpt
+                _ckpt.save(checkpoint_dir, k_restart, {"V": V, "T": T},
+                           extra={"kind": "ke_dist", "j": int(j0),
+                                  "n_matvec": int(n_matvec)},
+                           keep=checkpoint_keep)
+            if preempt_after is not None \
+                    and k_restart - k0 + 1 >= preempt_after:
+                from repro.resilience.faults import SimulatedPreemption
+                raise SimulatedPreemption(k_restart)
+            if not health_ok:
+                healthy = False
+                n_restart = k_restart + 1
+                break
+            if conv_ok:
                 converged = True
                 n_restart = k_restart + 1
                 break
@@ -331,9 +400,11 @@ def solve_ke_distributed(
     if return_info:
         info = {"stage_times": times, "n_matvec": int(n_matvec),
                 "n_restart": int(n_restart),
-                "converged": bool(converged),
+                "converged": bool(converged), "healthy": bool(healthy),
                 "p": int(p), "filter_degree": int(filter_degree),
                 "precision": precision, "fused": bool(divisible)}
+        if resumed_from is not None:
+            info["resumed_from"] = int(resumed_from)
         return lam, X, info
     return lam, X
 

@@ -77,6 +77,19 @@ def run_audit(quick: bool = False, entry: str | None = None,
     n_xfail = sum(1 for c in checks if not c.ok)
     ok = (n_viol == 0 and n_lint_err == 0 and n_xfail == 0
           and dtypes["ok"])
+    # the resilience proof in one place: every sentinel-bearing contract
+    # holds with ZERO extra dispatches (the allowance is pinned to 0), and
+    # the required fused is_finite sites are present in the lowered traces
+    sentinel_entries = [r for r in reports
+                        if not r.skipped and r.contract.min_isfinite_sites]
+    sentinels = {
+        "entries": len(sentinel_entries),
+        "isfinite_sites": sum(r.isfinite_sites for r in sentinel_entries),
+        "extra_dispatches_allowed": max(
+            (r.contract.sentinel_extra_dispatches
+             for r in sentinel_entries), default=0),
+        "ok": all(r.ok for r in sentinel_entries),
+    }
     return {
         "schema": "repro/static-audit/v1",
         "jax_version": jax.__version__,
@@ -92,6 +105,7 @@ def run_audit(quick: bool = False, entry: str | None = None,
             "lint_warnings": (len(pallas) + len(sigs) - n_lint_err),
             "precision_leaks": len(dtypes["precision_leaks"]),
         },
+        "sentinels": sentinels,
         "entries": [r.as_json_dict() for r in reports],
         "crosscheck": [c.as_json_dict() for c in checks],
         "pallas_lint": [f.as_json_dict() for f in pallas],
@@ -126,6 +140,12 @@ def _print_human(payload: dict) -> None:
     leaks = payload["dtype_lint"]["precision_leaks"]
     for leak in leaks:
         print(f"  !! precision leak: {leak}")
+    sen = payload.get("sentinels")
+    if sen:
+        mark = "ok  " if sen["ok"] else "FAIL"
+        print(f"  {mark} health sentinels: {sen['isfinite_sites']} fused "
+              f"is_finite site(s) across {sen['entries']} contract(s), "
+              f"+{sen['extra_dispatches_allowed']} dispatches allowed")
     print("AUDIT " + ("PASSED" if payload["ok"] else "FAILED"))
 
 

@@ -96,6 +96,15 @@ def main() -> None:
                     help="DATAxMODEL mesh for the router fallback path")
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--on-failure", choices=["recover", "warn", "ignore"],
+                    default="recover",
+                    help="per-lane failure policy: 'recover' quarantines "
+                         "unhealthy/unconverged lanes and retries them up "
+                         "the degradation ladder, dead-lettering what "
+                         "cannot be saved")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="individual retries per quarantined lane before "
+                         "it is dead-lettered")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -106,7 +115,9 @@ def main() -> None:
                          max_batched_n=args.max_batched_n,
                          mesh=_parse_mesh(args.mesh),
                          band_width=args.band_width,
-                         max_restarts=args.max_restarts)
+                         max_restarts=args.max_restarts,
+                         on_failure=args.on_failure,
+                         max_retries=args.max_retries)
 
     stream = list(request_stream(kinds, shapes, args.requests, args.seed,
                                  args.oversize_every, args.oversize_n))
@@ -121,6 +132,8 @@ def main() -> None:
         engine.tick()          # continuous service: dispatch full buckets
     done = engine.run_until_drained(flush=True)
     wall = time.perf_counter() - t0
+    # the no-silent-drop invariant: every submission retires somewhere
+    assert len(done) + len(engine.dead_letters) == args.requests
 
     # verify every retirement against the generator's known spectrum
     max_err = 0.0

@@ -102,6 +102,15 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host-platform devices (set before the "
                          "jax import; pairs with --mesh on CPU)")
+    ap.add_argument("--on-failure", choices=["recover", "warn", "ignore"],
+                    default="warn",
+                    help="degradation-ladder policy (resilience.recovery): "
+                         "'warn' diagnoses failures, 'recover' additionally "
+                         "retries/escalates/falls back, 'ignore' restores "
+                         "the pre-resilience behavior")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="transient-failure retries under "
+                         "--on-failure recover")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -117,6 +126,7 @@ def main() -> None:
                 max_restarts=args.max_restarts, mesh=mesh, tol=args.tol,
                 krylov_block=args.krylov_block, filter=args.filter_degree,
                 precision=args.precision,
+                on_failure=args.on_failure, max_retries=args.max_retries,
                 # the router's clustered-spectrum hint: the DFT generator's
                 # low end is the paper's slow-Lanczos regime
                 clustered=(args.problem == "dft"
@@ -137,7 +147,11 @@ def main() -> None:
         "relative_residual": float(acc.relative_residual),
         "max_abs_eval_error": err,
         "n_matvec": int(res.info.get("n_matvec", 0)),
+        "health": res.info["health"],
+        "recovery": res.info["recovery"],
     }
+    if "warnings" in res.info:
+        payload["warnings"] = res.info["warnings"]
     if "router" in res.info:
         payload["router"] = res.info["router"]
     if "refinement" in res.info:

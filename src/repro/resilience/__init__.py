@@ -1,0 +1,29 @@
+"""Failure containment and recovery for the eigensolver stack.
+
+Three layers, threaded through every solver path:
+
+``health``    stage-boundary sentinels: ``isfinite`` reductions fused
+              into the existing one-program pipelines (zero extra
+              dispatches) plus host-side checks on composite-stage
+              outputs, summarized as a JSON-clean ``HealthVerdict``
+              carried in ``info["health"]``.
+``recovery``  the declarative degradation ladder (Cholesky breakdown ->
+              diagonal-shift retry -> diagnosed ``SolverError``; KE/KI
+              unconverged -> escalate restarts/filter -> TT fallback;
+              refinement stall on mixed/fast -> fp64 rerun), every rung
+              recorded in ``info["recovery"]``.
+``faults``    the seeded fault-injection harness behind the chaos test
+              suite (NaN stage poisoning, non-SPD pencils, forced
+              nonconvergence, simulated preemption / host loss).
+"""
+from repro.resilience.health import (HealthVerdict, array_finite,
+                                     host_finite, verdict_from_stages)
+from repro.resilience.recovery import (ON_FAILURE, SolverError,
+                                       cholesky_shift_taus,
+                                       validate_on_failure)
+
+__all__ = [
+    "HealthVerdict", "array_finite", "host_finite", "verdict_from_stages",
+    "ON_FAILURE", "SolverError", "cholesky_shift_taus",
+    "validate_on_failure",
+]

@@ -1,0 +1,97 @@
+"""Stage-boundary health sentinels.
+
+Two flavors, chosen per stage so the sentinels cost **zero extra
+dispatches** (the static auditor pins this, see
+``analysis/static_audit/contracts``):
+
+* *Fused* — ``array_finite`` / ``chol_health`` are traceable reductions
+  folded into an already-jitted stage program (the GS1/GS2 module jits,
+  the batched bucket pipelines, the thick-restart segment, the
+  distributed KE restart program).  The scalar verdict rides out with
+  the stage outputs the host was fetching anyway.
+* *Host* — composite stages (the TT1 sweep, the TT2 chase, the TD
+  reflector loop) already hand small arrays back to the host between
+  their fused programs; ``host_finite`` runs ``np.isfinite`` on those,
+  which is free of device dispatches by construction.
+
+The per-stage booleans are folded into a ``HealthVerdict`` carried in
+``info["health"]`` — a plain dataclass whose ``as_json_dict`` output
+survives ``json.dumps`` (the ``test_info_json`` contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HealthVerdict", "array_finite", "chol_health", "host_finite",
+           "verdict_from_stages"]
+
+
+@dataclass
+class HealthVerdict:
+    """Per-stage finite/converged verdict for one solve.
+
+    ``stages`` maps stage name (GS1, GS2, TT1, ..., OUT) to a bool;
+    ``first_unhealthy_stage`` is the earliest failing stage in pipeline
+    order, or None.  JSON-clean via ``as_json_dict``.
+    """
+
+    healthy: bool = True
+    stages: Dict[str, bool] = field(default_factory=dict)
+    first_unhealthy_stage: Optional[str] = None
+    detail: str = ""
+
+    def record(self, stage: str, ok) -> bool:
+        ok = bool(ok)
+        self.stages[stage] = ok
+        if not ok and self.healthy:
+            self.healthy = False
+            self.first_unhealthy_stage = stage
+        return ok
+
+    def as_json_dict(self) -> dict:
+        return {
+            "healthy": bool(self.healthy),
+            "stages": {k: bool(v) for k, v in self.stages.items()},
+            "first_unhealthy_stage": self.first_unhealthy_stage,
+            "detail": self.detail,
+        }
+
+
+def array_finite(*arrays):
+    """Traceable all-finite reduction over one or more arrays.
+
+    Fuses into whatever program it is traced in; returns a bool scalar.
+    """
+    ok = jnp.asarray(True)
+    for a in arrays:
+        ok = ok & jnp.isfinite(a).all()
+    return ok
+
+
+def chol_health(U):
+    """Fused GS1 sentinel: finite factor with a positive diagonal.
+
+    ``jnp.linalg.cholesky`` reports breakdown as NaN rows, so finiteness
+    alone catches a non-SPD B; ``min_diag`` additionally exposes the
+    near-breakdown margin for diagnosis.
+    """
+    d = jnp.diagonal(U)
+    finite = jnp.isfinite(U).all()
+    return finite & (d > 0).all(), jnp.min(jnp.where(jnp.isfinite(d), d, 0.0))
+
+
+def host_finite(*arrays) -> bool:
+    """Host-side all-finite check on already-fetched (small) outputs."""
+    return all(bool(np.isfinite(np.asarray(a)).all()) for a in arrays)
+
+
+def verdict_from_stages(stages: Dict[str, bool], detail: str = "",
+                        ) -> HealthVerdict:
+    v = HealthVerdict(detail=detail)
+    for name, ok in stages.items():
+        v.record(name, ok)
+    return v

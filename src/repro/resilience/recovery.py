@@ -1,0 +1,78 @@
+"""The degradation ladder: declarative, bounded, observable recovery.
+
+Policies (applied by ``core.gsyeig.solve`` and ``serve.eigen_engine``):
+
+* Cholesky breakdown (GS1 NaN / nonpositive pivot): retry with a
+  relative diagonal shift ``tau * max|diag B|`` for each rung in
+  ``cholesky_shift_taus()``; refinement still targets the *original*
+  pencil, so a successful rung reports the shift it used instead of
+  silently changing the problem.  Exhausted -> diagnosed
+  ``SolverError``.
+* KE/KI unconverged inside the restart budget: under
+  ``on_failure="recover"``, escalate (restarts x4, Chebyshev filter
+  degree up), then fall back to the direct TT variant.
+* mixed/fast refinement stalling above tolerance: rerun at fp64.
+* Non-finite stage or output: one transient retry (fresh key) under
+  ``recover``, else raise ``SolverError`` with the failing stage.
+
+Every rung taken is appended to ``info["recovery"]`` as a plain dict
+(action, stage, params, outcome) so retries are observable and
+deterministic; ``on_failure="ignore"`` restores the old silent behavior
+but still records the verdict.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+__all__ = ["SolverError", "ON_FAILURE", "validate_on_failure",
+           "cholesky_shift_taus", "rung"]
+
+ON_FAILURE = ("recover", "warn", "ignore")
+
+# relative diagonal shifts tried on GS1 breakdown, weakest first —
+# 1e-14 rescues roundoff-level indefiniteness without moving converged
+# eigenvalues past the 1e-12 Table-3 tolerances; 1e-6 is the last rung
+# before we declare the pencil non-SPD
+_SHIFT_TAUS = (1e-14, 1e-10, 1e-6)
+
+
+class SolverError(RuntimeError):
+    """A diagnosed solver failure.
+
+    ``diagnosis`` is a JSON-clean dict: ``stage`` (pipeline stage that
+    failed), ``reason`` (``cholesky_breakdown`` | ``nonfinite_stage`` |
+    ``nonfinite_output`` | ``retries_exhausted``), ``hint`` (what to
+    try), and the ``recovery`` trail of rungs already attempted.
+    """
+
+    def __init__(self, message: str, *, stage: str, reason: str,
+                 hint: str = "", recovery=None, health=None):
+        super().__init__(message)
+        self.diagnosis = {
+            "stage": stage,
+            "reason": reason,
+            "hint": hint,
+            "recovery": list(recovery or []),
+        }
+        if health is not None:
+            self.diagnosis["health"] = health
+
+
+def validate_on_failure(on_failure: str) -> str:
+    if on_failure not in ON_FAILURE:
+        raise ValueError(
+            f"on_failure must be one of {ON_FAILURE}, got {on_failure!r}")
+    return on_failure
+
+
+def cholesky_shift_taus() -> Tuple[float, ...]:
+    return _SHIFT_TAUS
+
+
+def rung(action: str, stage: str, outcome: str, **params) -> dict:
+    """One recovery-ladder entry for ``info['recovery']``."""
+    entry = {"action": action, "stage": stage, "outcome": outcome}
+    if params:
+        entry["params"] = {k: (float(v) if isinstance(v, float) else v)
+                           for k, v in params.items()}
+    return entry

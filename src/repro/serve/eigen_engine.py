@@ -15,7 +15,14 @@ set of recurring shapes. The engine
     ``variant='auto'`` cost-model router in ``core.gsyeig.solve`` (with the
     engine's device mesh, if any),
   * retires every request with per-request latency + dispatch metadata in
-    ``req.info``.
+    ``req.info`` — every retired request carries a uniform ``warnings``
+    list and a ``health`` verdict (both always present, JSON-clean),
+  * QUARANTINES unhealthy / unconverged lanes of a vmapped bucket: the
+    failing pencil is retried individually up the degradation ladder
+    (``core.gsyeig.solve`` with the engine's ``on_failure`` policy,
+    bounded backoff), so one bad pencil cannot poison its bucket-mates;
+    a lane that exhausts ``max_retries`` is DEAD-LETTERED with its
+    verdict (``engine.dead_letters``) instead of silently dropped.
 
 ``run_until_drained(flush=True)`` flushes partially-filled buckets at the
 end of a stream, so a bucket never strands requests.
@@ -33,6 +40,7 @@ import numpy as np
 
 from repro.core.batched import BATCHED_VARIANTS, solve_batched
 from repro.core.gsyeig import solve
+from repro.resilience.recovery import SolverError, validate_on_failure
 
 BucketKey = Tuple[int, int, str, bool, str]  # (n, s, which, invert, variant)
 
@@ -71,6 +79,16 @@ class EigenEngine:
         ``variant='auto'`` router (optionally onto ``mesh``) — batching a
         handful of huge pencils would thrash memory for no dispatch win.
     mesh : optional ``jax.sharding.Mesh`` handed to the router path.
+    max_retries : individual retries a quarantined lane gets before it is
+        dead-lettered.
+    on_failure : the ladder policy handed to ``core.gsyeig.solve`` for
+        quarantine/direct solves; also selects whether UNCONVERGED bucket
+        lanes are quarantined (``'recover'``, the default) or retired
+        with a warning (``'warn'``, the pre-quarantine behavior).
+        Unhealthy (non-finite) lanes are never retired silently under
+        either policy; ``'ignore'`` restores the old behavior entirely.
+    retry_backoff_s : sleep before quarantine retry k of ``k * backoff``
+        seconds (bounded, linear).
     """
 
     def __init__(self, slots: int = 4,
@@ -81,9 +99,13 @@ class EigenEngine:
                  band_width: int = 8,
                  m: int | None = None,
                  max_restarts: int = 200,
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None,
+                 max_retries: int = 2,
+                 on_failure: str = "recover",
+                 retry_backoff_s: float = 0.0):
         assert slots >= 1
         assert variant in BATCHED_VARIANTS, variant
+        validate_on_failure(on_failure)
         self.slots = slots
         self.bucket_shapes = (None if bucket_shapes is None
                               else sorted(set(int(n) for n in bucket_shapes)))
@@ -93,13 +115,18 @@ class EigenEngine:
         self.band_width = band_width
         self.m = m
         self.max_restarts = max_restarts
+        self.max_retries = max_retries
+        self.on_failure = on_failure
+        self.retry_backoff_s = retry_backoff_s
         self._key = key if key is not None else jax.random.PRNGKey(1729)
         self.buckets: "OrderedDict[BucketKey, List[EigenRequest]]" = \
             OrderedDict()
         self.direct_queue: List[EigenRequest] = []
         self.done: List[EigenRequest] = []
+        self.dead_letters: List[EigenRequest] = []
         self._uid = 0
         self.n_dispatches = 0
+        self.n_quarantined = 0
 
     # -------------------------------------------------------------- admit --
     def _batchable(self, n: int, variant: Optional[str]) -> bool:
@@ -153,33 +180,150 @@ class EigenEngine:
         evals = np.asarray(res.evals)
         X = np.asarray(res.X)
         conv = np.asarray(res.converged)
+        healthy = np.asarray(res.healthy)
         for i, req in enumerate(reqs):
+            lane_healthy = bool(healthy[i])
+            lane_conv = bool(conv[i])
+            # per-lane quarantine: an unhealthy lane is NEVER retired as a
+            # result (its eigenpairs are NaN); an unconverged lane is
+            # quarantined under 'recover' so the ladder can escalate it
+            if ((not lane_healthy and self.on_failure != "ignore")
+                    or (not lane_conv and self.on_failure == "recover")):
+                self._quarantine(
+                    req, bkey,
+                    "nonfinite lane" if not lane_healthy
+                    else "unconverged lane")
+                continue
             req.evals, req.X = evals[i], X[i]
             req.A = req.B = None  # free the operands; results stay
             req.finished_at = now
+            warnings = []
+            if not lane_conv:
+                warnings.append(
+                    f"{variant}: pencil retired at the restart budget "
+                    f"(max_restarts={self.max_restarts}) without "
+                    f"converging; residuals may exceed tolerance")
+            if not lane_healthy:
+                warnings.append(
+                    f"{variant}: pencil retired with NON-FINITE eigenpairs "
+                    f"(on_failure='ignore')")
             req.info = {"path": "batched", "bucket": list(bkey),
                         "batch": len(reqs), "variant": variant,
-                        "converged": bool(conv[i]),
+                        "converged": lane_conv,
                         "cache_hit": res.info["cache_hit"],
                         "compile_s": res.info["compile_s"],
                         "dispatch_wall_s": res.info["wall_s"],
-                        "latency_s": req.finished_at - req.submitted_at}
-            if not conv[i]:
-                req.info["warnings"] = [
-                    f"{variant}: pencil retired at the restart budget "
-                    f"(max_restarts={self.max_restarts}) without "
-                    f"converging; residuals may exceed tolerance"]
+                        "latency_s": req.finished_at - req.submitted_at,
+                        "warnings": warnings,
+                        "health": {"healthy": lane_healthy,
+                                   "stages": {"PIPELINE": lane_healthy},
+                                   "first_unhealthy_stage":
+                                       None if lane_healthy else "PIPELINE",
+                                   "detail": "fused per-lane sentinel of "
+                                             "the vmapped bucket program"},
+                        "recovery": []}
             self.done.append(req)
+
+    def _quarantine(self, req: EigenRequest, bkey: BucketKey,
+                    why: str) -> None:
+        """Retry one failing bucket lane individually up the ladder, with
+        bounded linear backoff; dead-letter it when the retries are spent.
+        The operands are still attached (they are only freed at
+        retirement), so the retry solves exactly the submitted pencil."""
+        n, s, which, invert, variant = bkey
+        self.n_quarantined += 1
+        trail: List[Dict[str, Any]] = [
+            {"action": "quarantine", "stage": "bucket", "outcome": why,
+             "params": {"bucket": list(bkey)}}]
+        last_diag: Dict[str, Any] = {}
+        for attempt in range(1, self.max_retries + 1):
+            if self.retry_backoff_s > 0:
+                time.sleep(self.retry_backoff_s * attempt)
+            try:
+                res = solve(req.A, req.B, req.s, variant=variant,
+                            which=which, invert=invert,
+                            band_width=self.band_width, m=self.m,
+                            max_restarts=self.max_restarts,
+                            key=self._next_key(),
+                            on_failure=self.on_failure)
+            except SolverError as err:
+                last_diag = err.diagnosis
+                trail.append({"action": "quarantine_retry",
+                              "stage": err.diagnosis["stage"],
+                              "outcome": "failed",
+                              "params": {"attempt": attempt,
+                                         "reason": err.diagnosis["reason"]}})
+                continue
+            self.n_dispatches += 1
+            ok = (res.info["health"]["healthy"]
+                  and (res.info.get("converged", True)
+                       or self.on_failure != "recover"))
+            trail.append({"action": "quarantine_retry", "stage": "solve",
+                          "outcome": "recovered" if ok else "unconverged",
+                          "params": {"attempt": attempt}})
+            if ok:
+                req.evals = np.asarray(res.evals)
+                req.X = np.asarray(res.X)
+                req.A = req.B = None
+                req.finished_at = time.perf_counter()
+                req.info = {
+                    "path": "quarantine", "bucket": list(bkey),
+                    "variant": res.info["variant"],
+                    "converged": bool(res.info.get("converged", True)),
+                    "attempts": attempt,
+                    "latency_s": req.finished_at - req.submitted_at,
+                    "warnings": list(res.info.get("warnings", [])),
+                    "health": res.info["health"],
+                    "recovery": trail + list(res.info.get("recovery", []))}
+                self.done.append(req)
+                return
+            last_diag = {"stage": "solve", "reason": "unconverged",
+                         "hint": "restart budget exhausted on individual "
+                                 "retry", "recovery": []}
+        self._dead_letter(req, bkey, trail, last_diag)
+
+    def _dead_letter(self, req: EigenRequest, bkey: Optional[BucketKey],
+                     trail: List[Dict[str, Any]],
+                     diagnosis: Dict[str, Any]) -> None:
+        """Retire a request into ``dead_letters`` with its verdict — the
+        no-silent-drop invariant: every submitted uid lands in ``done``
+        or here, never nowhere."""
+        req.A = req.B = None
+        req.finished_at = time.perf_counter()
+        req.info = {
+            "path": "dead_letter",
+            "bucket": None if bkey is None else list(bkey),
+            "variant": req.variant,
+            "converged": False,
+            "latency_s": req.finished_at - req.submitted_at,
+            "warnings": [f"request {req.uid} dead-lettered after "
+                         f"{self.max_retries} quarantine retries"],
+            "health": {"healthy": False,
+                       "stages": diagnosis.get("health", {}),
+                       "first_unhealthy_stage": diagnosis.get("stage"),
+                       "detail": diagnosis.get("reason", "")},
+            "recovery": trail,
+            "dead_letter": {k: v for k, v in diagnosis.items()
+                            if k != "health"}}
+        self.dead_letters.append(req)
 
     def _dispatch_direct(self, req: EigenRequest) -> None:
         # core.solve's mesh= dispatch implements KE/TT (and 'auto' restricts
         # itself to those); a direct TD/KI request runs on one device
         mesh = self.mesh if req.variant in ("KE", "TT", "auto") else None
-        res = solve(req.A, req.B, req.s, variant=req.variant,
-                    which=req.which, invert=req.invert,
-                    band_width=self.band_width, m=self.m,
-                    max_restarts=self.max_restarts, mesh=mesh,
-                    key=self._next_key())
+        try:
+            res = solve(req.A, req.B, req.s, variant=req.variant,
+                        which=req.which, invert=req.invert,
+                        band_width=self.band_width, m=self.m,
+                        max_restarts=self.max_restarts, mesh=mesh,
+                        key=self._next_key(), on_failure=self.on_failure)
+        except SolverError as err:
+            self.n_dispatches += 1
+            self._dead_letter(
+                req, None,
+                [{"action": "direct_solve", "stage": err.diagnosis["stage"],
+                  "outcome": "failed"}], err.diagnosis)
+            return
         self.n_dispatches += 1
         req.evals = np.asarray(res.evals)
         req.X = np.asarray(res.X)
@@ -187,11 +331,12 @@ class EigenEngine:
         req.finished_at = time.perf_counter()
         req.info = {"path": "direct", "variant": res.info["variant"],
                     "stage_times": res.stage_times,
-                    "latency_s": req.finished_at - req.submitted_at}
+                    "latency_s": req.finished_at - req.submitted_at,
+                    "warnings": list(res.info.get("warnings", [])),
+                    "health": res.info["health"],
+                    "recovery": list(res.info.get("recovery", []))}
         if "router" in res.info:
             req.info["router"] = res.info["router"]
-        if "warnings" in res.info:
-            req.info["warnings"] = res.info["warnings"]
         self.done.append(req)
 
     # --------------------------------------------------------------- tick --
@@ -240,7 +385,7 @@ class EigenEngine:
                 name = f"n{n}_s{s}_{which}_{variant}" + \
                     ("_inv" if invert else "")
             else:
-                name = "direct"
+                name = req.info.get("path", "direct")
             b = per_bucket.setdefault(name, {"count": 0, "latency_s": []})
             b["count"] += 1
             b["latency_s"].append(req.info["latency_s"])
@@ -248,8 +393,11 @@ class EigenEngine:
             lat = b.pop("latency_s")
             b["mean_latency_s"] = float(np.mean(lat))
             b["p90_latency_s"] = float(np.percentile(lat, 90))
-        return {"requests": len(self.done),
+        return {"requests": len(self.done) + len(self.dead_letters),
                 "dispatches": self.n_dispatches,
+                "quarantined": self.n_quarantined,
+                "dead_letters": len(self.dead_letters),
+                "dead_letter_uids": [r.uid for r in self.dead_letters],
                 "buckets": per_bucket}
 
 

@@ -154,9 +154,12 @@ def test_solve_batched_surfaces_unconverged():
 
 
 def test_engine_surfaces_unconverged_and_cache_metadata():
+    # on_failure='warn' retires unconverged lanes with a warning instead
+    # of quarantining them (the quarantine path has its own tests in
+    # test_resilience.py)
     probs = _pencils(md_like, N, 2, seed=500)
     eng = EigenEngine(slots=2, bucket_shapes=[N], variant="KE",
-                      max_restarts=1)
+                      max_restarts=1, on_failure="warn")
     for p in probs:
         eng.submit(p.A, p.B, S)
     done = eng.run_until_drained()
@@ -165,3 +168,6 @@ def test_engine_surfaces_unconverged_and_cache_metadata():
         assert "cache_hit" in req.info and "compile_s" in req.info
         assert not req.info["converged"]
         assert any("restart budget" in w for w in req.info["warnings"])
+        # every retired request carries the uniform resilience fields
+        assert isinstance(req.info["warnings"], list)
+        assert req.info["health"]["healthy"] is True

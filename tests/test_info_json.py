@@ -37,6 +37,17 @@ def test_stage_times_json_clean(ke_result):
     assert all(isinstance(v, float) for v in times.values())
 
 
+def test_health_and_recovery_json_roundtrip(ke_result):
+    """Every solve carries the resilience fields, JSON-clean end to end
+    (the serving engine and the bench scripts dump them verbatim)."""
+    back = json.loads(json.dumps(ke_result.info))
+    assert back["health"]["healthy"] is True
+    assert back["health"]["first_unhealthy_stage"] is None
+    stages = back["health"]["stages"]
+    assert stages.get("GS1") is True and stages.get("OUT") is True
+    assert back["recovery"] == []
+
+
 def test_auto_router_info_json_clean():
     prob = md_like(48)
     res = solve(prob.A, prob.B, 3, variant="auto")

@@ -66,7 +66,7 @@ def test_lanczos_jit_driver_matches_host():
     C, lam = _sym_with_known_spectrum(n, K2)
     v0 = jax.random.normal(K3, (n,), jnp.float64)
     m = 24
-    evals, evecs, k, conv = lanczos_solve_jit(ExplicitC(C), v0, s, m,
+    evals, evecs, k, conv, healthy = lanczos_solve_jit(ExplicitC(C), v0, s, m,
                                               which="SA", max_restarts=200)
     assert bool(conv)
     np.testing.assert_allclose(np.asarray(evals), np.asarray(lam[:s]),
@@ -265,7 +265,7 @@ def test_jit_driver_block_filtered_matches_host():
     n, s, p, m = 96, 4, 4, 32
     C, lam = _sym_with_known_spectrum(n, K2)
     v0 = jax.random.normal(K3, (n, p), jnp.float64)
-    evals, evecs, k, conv = lanczos_solve_jit(ExplicitC(C), v0, s, m,
+    evals, evecs, k, conv, healthy = lanczos_solve_jit(ExplicitC(C), v0, s, m,
                                               which="SA", max_restarts=200,
                                               p=p, filter_degree=8)
     assert bool(conv)
